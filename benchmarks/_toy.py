@@ -1,0 +1,213 @@
+"""Container-scale stand-ins for the paper's evaluation models.
+
+* ``ToyCNN`` — conv(3×3)+BN+ReLU stack + dense head: the architecture family
+  the paper evaluates (conv kernels give SQuant-K its natural granularity,
+  BN gives DFQ/ZeroQ their statistics). Trained on a deterministic synthetic
+  5-class texture task to >90% accuracy in seconds on CPU.
+* ``train_toy_lm`` — a reduced transformer LM on the Markov stream (the
+  framework's serving domain), for perplexity-based comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# synthetic texture classification
+# ---------------------------------------------------------------------------
+
+N_CLASSES = 5
+
+
+def texture_batch(rng: np.random.Generator, n: int, size: int = 16
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic 5-class texture images (stripes/checks/blobs)."""
+    xs = np.zeros((n, size, size, 1), np.float32)
+    ys = rng.integers(0, N_CLASSES, size=n)
+    xx, yy = np.meshgrid(np.arange(size), np.arange(size))
+    for i in range(n):
+        f = rng.uniform(0.5, 1.5)
+        ph = rng.uniform(0, 2 * np.pi)
+        c = ys[i]
+        if c == 0:
+            img = np.sin(f * xx + ph)
+        elif c == 1:
+            img = np.sin(f * yy + ph)
+        elif c == 2:
+            img = np.sin(f * (xx + yy) / 1.4 + ph)
+        elif c == 3:
+            img = np.sign(np.sin(f * xx + ph) * np.sin(f * yy + ph))
+        else:
+            img = np.cos(f * np.hypot(xx - size / 2, yy - size / 2) / 2 + ph)
+        xs[i, :, :, 0] = img + rng.normal(0, 0.15, size=(size, size))
+    return xs, ys.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# ToyCNN: conv + BN + ReLU ×4 → GAP → dense
+# ---------------------------------------------------------------------------
+
+CHANNELS = (16, 24, 32, 32)
+
+
+def init_cnn(key) -> Dict:
+    params: Dict = {}
+    cin = 1
+    ks = jax.random.split(key, len(CHANNELS) + 1)
+    for i, cout in enumerate(CHANNELS):
+        params[f"conv{i}"] = {
+            "w_conv": jax.random.normal(ks[i], (3, 3, cin, cout),
+                                        jnp.float32)
+            * np.sqrt(2.0 / (9 * cin)),
+            "bias": jnp.zeros((cout,), jnp.float32),
+            "bn_scale": jnp.ones((cout,), jnp.float32),
+            "bn_bias": jnp.zeros((cout,), jnp.float32),
+        }
+        cin = cout
+    params["head"] = {"w": jax.random.normal(
+        ks[-1], (cin, N_CLASSES), jnp.float32) * 0.05}
+    return params
+
+
+def init_bn_state() -> Dict:
+    return {f"conv{i}": {"mean": jnp.zeros((c,), jnp.float32),
+                         "var": jnp.ones((c,), jnp.float32)}
+            for i, c in enumerate(CHANNELS)}
+
+
+def cnn_forward(params: Dict, x: jnp.ndarray, bn_state: Dict,
+                train: bool = False, capture: bool = False):
+    """Returns (logits, new_bn_state, activations?)."""
+    new_state = {}
+    acts = {}
+    h = x
+    for i in range(len(CHANNELS)):
+        p = params[f"conv{i}"]
+        if capture:
+            acts[f"conv{i}"] = h
+        h = jax.lax.conv_general_dilated(
+            h, p["w_conv"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = h + p["bias"]
+        if train:
+            mu = jnp.mean(h, axis=(0, 1, 2))
+            var = jnp.var(h, axis=(0, 1, 2))
+            st = bn_state[f"conv{i}"]
+            new_state[f"conv{i}"] = {
+                "mean": 0.9 * st["mean"] + 0.1 * mu,
+                "var": 0.9 * st["var"] + 0.1 * var}
+        else:
+            st = bn_state[f"conv{i}"]
+            mu, var = st["mean"], st["var"]
+            new_state[f"conv{i}"] = st
+        h = (h - mu) * jax.lax.rsqrt(var + 1e-5)
+        h = h * p["bn_scale"] + p["bn_bias"]
+        h = jax.nn.relu(h)
+        if i % 2 == 1:
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    feat = jnp.mean(h, axis=(1, 2))
+    logits = feat @ params["head"]["w"]
+    if capture:
+        return logits, new_state, acts
+    return logits, new_state
+
+
+_CNN_CACHE = {}
+
+
+def train_cnn_cached(steps: int = 250, seed: int = 0):
+    key = (steps, seed)
+    if key not in _CNN_CACHE:
+        _CNN_CACHE[key] = train_cnn(steps=steps, seed=seed)
+    return _CNN_CACHE[key]
+
+
+def train_cnn(steps: int = 300, batch: int = 64, lr: float = 2e-3,
+              seed: int = 0):
+    """Returns (params, bn_state, eval_fn, accuracy)."""
+    rng = np.random.default_rng(seed)
+    params = init_cnn(jax.random.PRNGKey(seed))
+    bn = init_bn_state()
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, bn, m, v, x, y, t):
+        def loss_fn(p):
+            logits, new_bn = cnn_forward(p, x, bn, train=True)
+            oh = jax.nn.one_hot(y, N_CLASSES)
+            l = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * oh, -1))
+            return l, new_bn
+        (l, new_bn), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        m = jax.tree_util.tree_map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: 0.999 * a + 0.001 * b * b,
+                                   v, g)
+        mh = jax.tree_util.tree_map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree_util.tree_map(lambda a: a / (1 - 0.999 ** t), v)
+        params = jax.tree_util.tree_map(
+            lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8),
+            params, mh, vh)
+        return params, new_bn, m, v, l
+
+    for t in range(1, steps + 1):
+        x, y = texture_batch(rng, batch)
+        params, bn, m, v, l = step(params, bn, m, v, jnp.asarray(x),
+                                   jnp.asarray(y), t)
+
+    def evaluate(p, n: int = 1000, seed: int = 999) -> float:
+        erng = np.random.default_rng(seed)
+        x, y = texture_batch(erng, n)
+        logits, _ = jax.jit(
+            lambda pp, xx: cnn_forward(pp, xx, bn, train=False))(
+                p, jnp.asarray(x))
+        return float(np.mean(np.argmax(np.asarray(logits), -1) == y))
+
+    return params, bn, evaluate
+
+
+# ---------------------------------------------------------------------------
+# toy LM
+# ---------------------------------------------------------------------------
+
+def train_toy_lm(steps: int = 120, seed: int = 0):
+    """Reduced granite on the Markov stream; returns (model, params,
+    eval_xent_fn)."""
+    import dataclasses as dc
+    from repro.configs import get_config
+    from repro.data.synthetic import markov_batches
+    from repro.models.model import build_model
+    from repro.training.optimizer import AdamWConfig, adamw_init
+    from repro.training.train_loop import make_train_step
+
+    cfg = get_config("granite-3-8b", reduced=True)
+    cfg = dc.replace(cfg, dtype="float32", n_layers=4, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                     vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=10, decay_steps=steps)
+    stepf = jax.jit(make_train_step(model, ocfg))
+    it = (jax.tree_util.tree_map(jnp.asarray, b)
+          for b in markov_batches(16, 64, cfg.vocab, seed=7))
+    for _ in range(steps):
+        params, opt, metrics = stepf(params, opt, next(it))
+
+    eval_batches = [jax.tree_util.tree_map(jnp.asarray, b) for b, _ in
+                    zip(markov_batches(16, 64, cfg.vocab, seed=7,
+                                       start=100_000), range(4))]
+
+    @jax.jit
+    def _xent(p, b):
+        return model.train_loss(p, b)[1]["xent"]
+
+    def eval_xent(p) -> float:
+        return float(np.mean([float(_xent(p, b)) for b in eval_batches]))
+
+    return model, params, eval_xent

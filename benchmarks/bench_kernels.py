@@ -1,0 +1,57 @@
+"""Kernel-level microbench: SQuant CASE quality + wall time of the
+vectorized implementation vs the sequential pseudocode reference, and
+dequant-matmul byte-savings accounting (the serving memory-roofline win).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reference import squant_reference
+from repro.core.squant import SQuantConfig, squant, squant_codes
+from repro.quant.scales import compute_scale
+
+
+def run(report=print) -> Dict:
+    out = {}
+    rng = np.random.default_rng(0)
+    # CASE quality + speedup vs sequential reference
+    w = rng.normal(size=(256, 2048)).astype(np.float32)
+    wj = jnp.asarray(w)
+    scale = compute_scale(wj, 4, "max")
+    codes, delta, _ = squant_codes(wj, scale, bits=4, group_size=128,
+                                   enable_k=True, enable_c=True)
+    jax.block_until_ready(codes)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        codes, delta, _ = squant_codes(wj, scale, bits=4, group_size=128,
+                                       enable_k=True, enable_c=True)
+        jax.block_until_ready(codes)
+    vec_ms = (time.perf_counter() - t0) / 5 * 1e3
+    t0 = time.perf_counter()
+    squant_reference(w[:32], np.asarray(scale)[:32], 4, 128)
+    seq_ms = (time.perf_counter() - t0) * 1e3 * (256 / 32)
+    d = np.asarray(delta)
+    out["vec_ms"] = vec_ms
+    out["seq_ms_est"] = seq_ms
+    report(f"kernels,squant_flip,vec_ms={vec_ms:.2f},"
+           f"seq_pseudocode_ms={seq_ms:.0f},"
+           f"speedup={seq_ms/max(vec_ms,1e-9):.0f}x,"
+           f"row_case_max={np.abs(d.sum(1)).max():.3f}")
+
+    # serving bytes: int4+scales vs bf16
+    for bits in (8, 4):
+        qt, _ = squant(wj, SQuantConfig(bits=bits, group_size=128))
+        dense = w.size * 2  # bf16
+        out[f"bytes_w{bits}"] = qt.nbytes()
+        report(f"kernels,dequant_matmul,w{bits},bytes={qt.nbytes()},"
+               f"vs_bf16={dense},ratio={dense/qt.nbytes():.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

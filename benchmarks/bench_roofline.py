@@ -1,0 +1,101 @@
+"""Roofline report: reads launch/dryrun.py artifacts and prints the per-cell
+three-term roofline table (see EXPERIMENTS.md §Roofline).
+
+Merges each cell's production artifact (memory/compile proof) with its
+costing artifact (loop-complete flops + collective bytes). Run
+``python -m repro.launch.dryrun --all`` (+ ``--costing``) first.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_cells() -> Dict[str, dict]:
+    cells: Dict[str, dict] = {}
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        key = f"{d['arch']}__{d['shape']}__{d.get('mesh', '?')}"
+        tag = d.get("tag", "")
+        slot = tag if tag else "prod"
+        cells.setdefault(key, {})[slot] = d
+    return cells
+
+
+def _terms(prod: dict, cost: dict) -> dict:
+    """Merged roofline terms: flops/bytes from the costing artifact,
+    collectives + memory floor + fit proof from the production artifact."""
+    rc = cost.get("roofline", {})
+    rp = prod.get("roofline", {})
+    comp = rc.get("compute_s", rp.get("compute_s", 0.0))
+    mem = rc.get("memory_s", rp.get("memory_s", 0.0))
+    floor = rp.get("memory_floor_s", rc.get("memory_floor_s", 0.0))
+    coll = rp.get("collective_s", 0.0)
+    dom = max((("compute", comp), ("memory", mem), ("collective", coll)),
+              key=lambda kv: kv[1])[0]
+    # roofline fraction: useful model flops vs the binding resource's time
+    bound = max(comp, mem, coll, 1e-30)
+    n = cost.get("n_chips", prod.get("n_chips", 256))
+    useful_s = cost.get("model_flops", prod.get("model_flops", 0.0)) \
+        / n / PEAK_FLOPS
+    return {"compute_s": comp, "memory_s": mem, "memory_floor_s": floor,
+            "collective_s": coll, "dominant": dom,
+            "roofline_frac": useful_s / bound,
+            "useful_ratio": rc.get("model_flops_ratio",
+                                   rp.get("model_flops_ratio"))}
+
+
+def row(key: str, cell: dict, slot_prod="prod", slot_cost="cost") -> str:
+    prod = cell.get(slot_prod, {})
+    cost = cell.get(slot_cost, prod)
+    if prod.get("status") == "skip" or cost.get("status") == "skip":
+        return f"{key},skip,{prod.get('reason', cost.get('reason', ''))}"
+    if prod.get("status") != "ok" and cost.get("status") != "ok":
+        return f"{key},error,{str(prod.get('error', '?'))[:120]}"
+    t = _terms(prod, cost)
+    hbm = prod.get("hbm_per_chip_gb", -1)
+    fits = prod.get("fits_16gb")
+    ur = t["useful_ratio"]
+    return (f"{key},ok,compute_ms={t['compute_s']*1e3:.3f},"
+            f"memory_ms={t['memory_s']*1e3:.3f},"
+            f"memfloor_ms={t['memory_floor_s']*1e3:.3f},"
+            f"collective_ms={t['collective_s']*1e3:.3f},"
+            f"dominant={t['dominant']},"
+            f"roofline_frac={t['roofline_frac']:.3f},"
+            f"useful_flops_ratio={ur if ur is None else round(ur, 3)},"
+            f"hbm_gb={hbm:.2f},fits={fits}")
+
+
+def run(report=print) -> Dict:
+    cells = load_cells()
+    out = {}
+    if not cells:
+        report("roofline,no-artifacts,run launch/dryrun.py first")
+        return out
+    for key in sorted(cells):
+        line = row(key, cells[key])
+        out[key] = line
+        report("roofline," + line)
+        # hillclimb variants: pair <tag> with cost-<tag> when present
+        extra = [s for s in cells[key]
+                 if s not in ("prod", "cost") and not s.startswith("cost")]
+        for s in sorted(extra):
+            line = row(f"{key}[{s}]", cells[key], slot_prod=s,
+                       slot_cost=f"cost-{s}"
+                       if f"cost-{s}" in cells[key] else s)
+            out[f"{key}[{s}]"] = line
+            report("roofline," + line)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Table 3 analog: quantization wall-time.
+
+The paper's headline systems claim: SQuant quantizes whole networks in
+milliseconds (no data, no BP) while generative DFQ takes minutes-hours.
+Here: SQuant vs data-free AdaRound (ZeroQ-style synthesis + gradient
+rounding) on the toy CNN, plus per-layer SQuant timing on mid-size LM
+weight matrices (up to granite-3-8b-sized layers).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import quantize_tree
+from repro.core.squant import SQuantConfig, squant
+
+from _toy import train_cnn
+from bench_accuracy import quantize_cnn
+
+
+def run(report=print) -> Dict:
+    out = {}
+    params, bn, _ = train_cnn(steps=60)   # quality irrelevant here
+
+    # whole-network quantization time (second call = steady-state, jitted)
+    for method in ("rtn", "squant"):
+        quantize_tree(params, method=method, bits=4, dequantize=True)
+        t0 = time.perf_counter()
+        _, rep = quantize_tree(params, method=method, bits=4,
+                               dequantize=True)
+        ms = (time.perf_counter() - t0) * 1e3
+        out[f"cnn_{method}_ms"] = ms
+        report(f"table3,cnn,{method},total_ms={ms:.1f},"
+               f"layers={len(rep.layers)}")
+
+    t0 = time.perf_counter()
+    quantize_cnn(params, bn, "adaround_df", 4)
+    ms = (time.perf_counter() - t0) * 1e3
+    out["cnn_adaround_df_ms"] = ms
+    report(f"table3,cnn,adaround_df,total_ms={ms:.1f},layers=5")
+
+    # per-layer SQuant timing at LM-layer scale (steady-state, jitted)
+    rng = np.random.default_rng(0)
+    for (m, n) in ((1024, 1024), (4096, 4096), (4096, 12800)):
+        w = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+        cfg = SQuantConfig(bits=4, group_size=128)
+        qt, _ = squant(w, cfg)                      # compile
+        jax.block_until_ready(qt.data)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            qt, _ = squant(w, cfg)
+            jax.block_until_ready(qt.data)
+        ms = (time.perf_counter() - t0) / 3 * 1e3
+        out[f"layer_{m}x{n}_ms"] = ms
+        report(f"table3,layer,{m}x{n},squant_ms={ms:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""End-to-end serving driver: batched requests against a model quantized
+on-the-fly (the paper's deployment story), with per-phase latency and the
+weight-byte savings that move the decode memory roofline.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.serving.engine import Request, ServeConfig, ServeEngine
+
+
+def main():
+    cfg = get_config("mixtral-8x7b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32", vocab=260)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = ByteTokenizer()
+    prompts = ["the quick brown fox", "data free quantization",
+               "hello tpu pods", "second order loss"]
+
+    for mode, scfg in {
+        "fp32": ServeConfig(max_batch=4, max_len=128),
+        "w8-squant": ServeConfig(max_batch=4, max_len=128,
+                                 quantize_weights="squant", weight_bits=8),
+        "w4-squant+int8kv": ServeConfig(max_batch=4, max_len=128,
+                                        quantize_weights="squant",
+                                        weight_bits=4, quantize_kv=True),
+    }.items():
+        eng = ServeEngine(model, params, scfg)
+        reqs = [Request(prompt=tok.encode(p), max_new_tokens=12,
+                        request_id=i) for i, p in enumerate(prompts)]
+        outs = eng.generate(reqs)
+        pre = np.mean([o.prefill_ms for o in outs])
+        dec = np.mean([o.decode_ms for o in outs])
+        extra = ""
+        if eng.quant_report:
+            extra = f" | quantized in {eng.quant_report.total_millis:.0f} ms"
+        print(f"[{mode:18s}] prefill {pre:7.1f} ms  decode {dec:7.1f} ms "
+              f"(12 tokens × {len(prompts)} reqs){extra}")
+        print(f"   first completion: {outs[0].tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Regenerate EXPERIMENTS.md tables from artifacts + bench logs.
+
+Usage: PYTHONPATH=src python scripts_build_experiments.py
+"""
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+
+ARCHS = ["minitron-4b", "minicpm3-4b", "gemma-7b", "granite-3-8b",
+         "seamless-m4t-medium", "chameleon-34b", "moonshot-v1-16b-a3b",
+         "mixtral-8x7b", "rwkv6-1.6b", "jamba-1.5-large-398b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(p))
+        # filename is authoritative: <arch>__<shape>__<mesh>[__<tag>].json
+        parts = os.path.basename(p)[:-5].split("__")
+        key = (parts[0], parts[1], parts[2])
+        tag = parts[3] if len(parts) > 3 else (d.get("tag") or "prod")
+        cells.setdefault(key, {})[tag or "prod"] = d
+    return cells
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}" if s is not None else "—"
+
+
+def dryrun_table(cells):
+    rows = ["| arch | shape | mesh | status | compile s | HBM/chip GB | "
+            "fits 16 GB | collective MB/step |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("pod", "multipod"):
+                d = cells.get((a, s, m), {}).get("prod")
+                if d is None:
+                    rows.append(f"| {a} | {s} | {m} | MISSING | | | | |")
+                elif d["status"] == "skip":
+                    rows.append(f"| {a} | {s} | {m} | skip (full attention "
+                                f"@512k) | | | | |")
+                elif d["status"] != "ok":
+                    rows.append(f"| {a} | {s} | {m} | ERROR | | | | |")
+                else:
+                    coll = d.get("collectives", {}).get("total", 0) / 1e6
+                    rows.append(
+                        f"| {a} | {s} | {m} | ok | {d['compile_s']:.0f} | "
+                        f"{d.get('hbm_per_chip_gb', -1):.2f} | "
+                        f"{'✓' if d.get('fits_16gb') else '✗'} | "
+                        f"{coll:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells):
+    rows = ["| arch | shape | compute ms | memory ms (XLA ub) | "
+            "mem floor ms | collective ms | dominant | roofline frac | "
+            "useful/HLO flops |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            slot = cells.get((a, s, "pod"), {})
+            prod, cost = slot.get("prod"), slot.get("cost")
+            if prod is None and cost is None:
+                continue
+            d = cost or prod
+            if d["status"] == "skip":
+                rows.append(f"| {a} | {s} | skip | | | | | | |")
+                continue
+            if d["status"] != "ok":
+                rows.append(f"| {a} | {s} | error | | | | | | |")
+                continue
+            rc = (cost or {}).get("roofline", {})
+            rp = (prod or {}).get("roofline", {})
+            comp = rc.get("compute_s", rp.get("compute_s", 0))
+            mem = rc.get("memory_s", rp.get("memory_s", 0))
+            floor = rp.get("memory_floor_s", rc.get("memory_floor_s", 0))
+            coll = rp.get("collective_s", 0)
+            n = d.get("n_chips", 256)
+            useful = d.get("model_flops", 0) / n / 197e12
+            bound = max(comp, mem, coll, 1e-30)
+            dom = max((("compute", comp), ("memory(ub)", mem),
+                       ("collective", coll)), key=lambda kv: kv[1])[0]
+            ur = rc.get("model_flops_ratio")
+            rows.append(
+                f"| {a} | {s} | {fmt_ms(comp)} | {fmt_ms(mem)} | "
+                f"{fmt_ms(floor)} | {fmt_ms(coll)} | {dom} | "
+                f"{useful/bound:.3f} | "
+                f"{'—' if ur is None else f'{ur:.3f}'} |")
+    return "\n".join(rows)
+
+
+def perf_variants(cells):
+    out = []
+    for (a, s, m), slots in sorted(cells.items()):
+        extra = [t for t in slots if t not in ("prod", "cost")
+                 and not t.startswith("cost")]
+        for t in extra:
+            d = slots[t]
+            if d.get("status") != "ok":
+                continue
+            cd = slots.get(f"cost-{t}")
+            r = (cd or d).get("roofline", {})
+            rp = d.get("roofline", {})
+            out.append(
+                f"* `{a} {s} {m}` **[{t}]**: "
+                f"compute {fmt_ms(r.get('compute_s', rp.get('compute_s')))} ms, "
+                f"memory(ub) {fmt_ms(r.get('memory_s', rp.get('memory_s')))} ms, "
+                f"floor {fmt_ms(rp.get('memory_floor_s'))} ms, "
+                f"collective {fmt_ms(rp.get('collective_s'))} ms, "
+                f"HBM {d.get('hbm_per_chip_gb', -1):.2f} GB "
+                f"(fits: {d.get('fits_16gb')})")
+    return "\n".join(out)
+
+
+def main():
+    cells = load()
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## |$)",
+                  "<!-- DRYRUN_TABLE -->\n\n" + dryrun_table(cells) + "\n\n",
+                  text, flags=re.S)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |$)",
+                  "<!-- ROOFLINE_TABLE -->\n\n" + roofline_table(cells)
+                  + "\n\n### Measured hillclimb variants\n\n"
+                  + perf_variants(cells) + "\n\n",
+                  text, flags=re.S)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables regenerated "
+          f"({len(cells)} cells, {sum(len(v) for v in cells.values())} "
+          "artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Sharded, async, reshard-on-restore checkpointing."""
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

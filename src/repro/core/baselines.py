@@ -1,0 +1,167 @@
+"""Data-free quantization baselines the paper compares against.
+
+* ``rtn``              — rounding-to-nearest (== SQuant-E): the DFQ default.
+* ``equalize_pair``    — DFQ cross-layer weight equalization (Nagel et al. '19).
+* ``bias_correction``  — DFQ bias correction given E[x] (from BN stats or 0).
+* ``synthesize_inputs``— ZeroQ-style statistic-matching input distillation
+                         (needs back-prop: the "No BP ✗" column of Table 1).
+* ``adaround``         — AdaRound (Nagel et al. '20) layer-wise learned
+                         rounding; combined with ``synthesize_inputs`` it is
+                         the "data-free AdaRound" baseline of Table 5.
+
+All are container-scale but algorithmically faithful; see
+``benchmarks/bench_accuracy.py`` for the comparison protocol.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QuantizedTensor, from_codes, qmax_for_bits
+from repro.quant.scales import compute_scale
+
+
+# ---------------------------------------------------------------------------
+# Rounding-to-nearest
+# ---------------------------------------------------------------------------
+
+def rtn(w2d: jnp.ndarray, bits: int, scale: Optional[jnp.ndarray] = None,
+        scale_method: str = "max") -> QuantizedTensor:
+    """Per-channel symmetric rounding quantization of an (M, N) matrix."""
+    qmax = qmax_for_bits(bits)
+    if scale is None:
+        scale = compute_scale(w2d, bits, scale_method)
+    codes = jnp.clip(jnp.round(w2d / scale), -qmax, qmax)
+    return from_codes(codes.astype(jnp.int8), scale, bits)
+
+
+# ---------------------------------------------------------------------------
+# DFQ: cross-layer equalization + bias correction
+# ---------------------------------------------------------------------------
+
+def equalize_pair(w1: jnp.ndarray, w2: jnp.ndarray,
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cross-layer equalization for y = W2·f(W1·x), f positive-homogeneous.
+
+    w1: (H, I) rows feed hidden units; w2: (O, H) columns consume them.
+    Scales s_h = sqrt(r1_h / r2_h) equalize per-channel ranges:
+    W1' = W1 / s, W2' = W2 * s (Nagel et al. 2019, Sec. 4.1).
+    """
+    r1 = jnp.max(jnp.abs(w1), axis=1)
+    r2 = jnp.max(jnp.abs(w2), axis=0)
+    s = jnp.sqrt(jnp.maximum(r1, 1e-12) / jnp.maximum(r2, 1e-12))
+    s = jnp.clip(s, 1e-4, 1e4)
+    return w1 / s[:, None], w2 * s[None, :], s
+
+
+def bias_correction(w_fp: jnp.ndarray, w_q: jnp.ndarray,
+                    mu_x: jnp.ndarray) -> jnp.ndarray:
+    """Expected-output correction  b += −(W_q − W_fp)·E[x]  (DFQ Sec. 4.2)."""
+    return -(w_q - w_fp) @ mu_x
+
+
+# ---------------------------------------------------------------------------
+# ZeroQ-style statistic-matching input synthesis (needs BP)
+# ---------------------------------------------------------------------------
+
+def synthesize_inputs(stat_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                      target_stats: jnp.ndarray, shape: Tuple[int, ...],
+                      key: jax.Array, iters: int = 100, lr: float = 0.1
+                      ) -> jnp.ndarray:
+    """Distill synthetic inputs x so stat_fn(x) matches target statistics.
+
+    ``stat_fn`` maps an input batch to a vector of network statistics (e.g.
+    per-layer pre-activation mean/var — the BN-statistics analogue). Plain
+    Adam on the input; this is the paper's "data-generative" DFQ family.
+    """
+    x = 0.5 * jax.random.normal(key, shape)
+
+    def loss(xv):
+        s = stat_fn(xv)
+        return jnp.mean((s - target_stats) ** 2)
+
+    grad = jax.jit(jax.grad(loss))
+    m = jnp.zeros_like(x)
+    v = jnp.zeros_like(x)
+    for t in range(1, iters + 1):
+        g = grad(x)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        x = x - lr * mh / (jnp.sqrt(vh) + 1e-8)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# AdaRound (layer-wise learned rounding)
+# ---------------------------------------------------------------------------
+
+def _rect_sigmoid(alpha, zeta=1.1, gamma=-0.1):
+    return jnp.clip(jax.nn.sigmoid(alpha) * (zeta - gamma) + gamma, 0.0, 1.0)
+
+
+def adaround(w2d: jnp.ndarray, x: jnp.ndarray, bits: int,
+             iters: int = 600, lr: float = 3e-2, beta_range=(20.0, 2.0),
+             reg_weight: float = 0.01, warmup: float = 0.2,
+             scale: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    """AdaRound: learn up/down rounding to minimize output MSE on ``x``.
+
+    w2d: (M, N); x: (S, N) calibration inputs (real or synthetic).
+    Output-MSE objective ‖xWᵀ − xW̃ᵀ‖² + λ·f_reg per Nagel et al. 2020:
+    the rectified-sigmoid relaxation starts at the soft (exact) weights, the
+    annealed regularizer polarizes h to {0,1}, and the reconstruction term
+    picks the better side for borderline elements. λ is normalized by the
+    initial hard-rounding reconstruction error so the balance is
+    scale-invariant. Whole loop is a single jitted lax.fori_loop.
+    """
+    qmax = qmax_for_bits(bits)
+    if scale is None:
+        scale = compute_scale(w2d, bits, "max")
+    ws = w2d / scale
+    floor = jnp.floor(ws)
+    resid = ws - floor                      # in [0, 1)
+    # init so that _rect_sigmoid(alpha) ≈ resid (paper's init)
+    p = jnp.clip((resid + 0.1) / 1.2, 1e-4, 1 - 1e-4)
+    alpha0 = jnp.log(p / (1 - p))
+    y_ref = x @ w2d.T
+    # normalize λ: hard-rounding reconstruction error sets the scale
+    hard = jnp.clip(floor + (resid > 0.5), -qmax, qmax) * scale
+    rec0 = jnp.mean((x @ hard.T - y_ref) ** 2)
+    lam = reg_weight * jnp.maximum(rec0, 1e-12)
+
+    def qw(alpha):
+        h = _rect_sigmoid(alpha)
+        return jnp.clip(floor + h, -qmax, qmax) * scale
+
+    def loss(alpha, beta, reg_on):
+        h = _rect_sigmoid(alpha)
+        rec = jnp.mean((x @ qw(alpha).T - y_ref) ** 2)
+        reg = jnp.mean(1 - jnp.abs(2 * h - 1) ** beta)
+        return rec + reg_on * lam * reg
+
+    grad = jax.grad(loss)
+    b0, b1 = beta_range
+
+    def body(t, carry):
+        alpha, m, v = carry
+        tt = t + 1
+        frac = tt / iters
+        beta = b0 + (b1 - b0) * frac
+        reg_on = jnp.where(frac > warmup, 1.0, 0.0)
+        g = grad(alpha, beta, reg_on)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** tt)
+        vh = v / (1 - 0.999 ** tt)
+        return (alpha - lr * mh / (jnp.sqrt(vh) + 1e-8), m, v)
+
+    alpha, _, _ = jax.lax.fori_loop(
+        0, iters, body, (alpha0, jnp.zeros_like(alpha0),
+                         jnp.zeros_like(alpha0)))
+    h_final = (_rect_sigmoid(alpha) > 0.5).astype(jnp.float32)
+    codes = jnp.clip(floor + h_final, -qmax, qmax)
+    return from_codes(codes.astype(jnp.int8), scale, bits)

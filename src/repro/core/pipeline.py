@@ -1,0 +1,156 @@
+"""Model-level on-the-fly quantization driver.
+
+Walks a parameter pytree, quantizes every matmul weight with the requested
+data-free method, and returns (new_tree, report). This is the "on-the-fly
+framework" of Sec. 3.4: no data, no back-prop, per-layer wall time recorded
+(Table 3's protocol).
+
+Conventions (shared with ``repro.models``):
+* dense kernels are dict leaves named ``w`` with shape (in, out);
+* expert kernels are named ``w`` with shape (experts, in, out);
+* conv kernels (test CNNs) are named ``w_conv`` with shape (KH, KW, in, out);
+* 1-D vectors (norm gains, biases, lerp vectors) are never quantized.
+
+SQuant semantics: rows are OUTPUT channels, so (in, out) kernels are
+transposed to (out, in) before quantization. The stored QuantizedTensor keeps
+the (out, in) layout — the serving layer (`models.layers.linear` /
+`kernels.dequant_matmul`) consumes it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines
+from repro.core.squant import SQuantConfig, squant
+from repro.quant.qtypes import QuantizedTensor
+
+METHODS = ("rtn", "squant", "squant_e", "squant_ek", "squant_ec")
+
+
+def _method_cfg(method: str, bits: int, group_size: Optional[int],
+                scale_method: str) -> SQuantConfig:
+    table = {
+        "squant":    dict(enable_k=True, enable_c=True),
+        "squant_e":  dict(enable_k=False, enable_c=False),
+        "squant_ek": dict(enable_k=True, enable_c=False),
+        "squant_ec": dict(enable_k=False, enable_c=True),
+    }
+    return SQuantConfig(bits=bits, group_size=group_size,
+                        scale_method=scale_method, **table[method])
+
+
+def is_quantizable(path: Tuple[str, ...], leaf: Any) -> bool:
+    if not isinstance(leaf, (jnp.ndarray, jax.Array)):
+        return False
+    if "router" in path:       # MoE routers: tiny + precision-sensitive
+        return False
+    name = path[-1] if path else ""
+    if name == "w" and leaf.ndim in (2, 3):
+        return True
+    if name == "w_conv" and leaf.ndim == 4:
+        return True
+    return False
+
+
+@dataclasses.dataclass
+class LayerReport:
+    path: str
+    shape: Tuple[int, ...]
+    millis: float
+    method: str
+    bits: int
+
+
+@dataclasses.dataclass
+class QuantReport:
+    layers: List[LayerReport]
+    total_millis: float
+    method: str
+    bits: int
+
+    def summary(self) -> str:
+        return (f"{self.method} w{self.bits}: {len(self.layers)} layers in "
+                f"{self.total_millis:.1f} ms "
+                f"({self.total_millis / max(len(self.layers), 1):.2f} ms/layer)")
+
+
+def _quantize_leaf(leaf: jnp.ndarray, method: str, bits: int,
+                   group_size: Optional[int], scale_method: str
+                   ) -> QuantizedTensor:
+    """Quantize one kernel; returns QuantizedTensor in (out, in)-major layout."""
+    if leaf.ndim == 2:                       # (in, out) -> (out, in)
+        w2d = leaf.T
+    elif leaf.ndim == 3:                     # (E, in, out) -> (E*out, in)
+        e, i, o = leaf.shape
+        w2d = jnp.transpose(leaf, (0, 2, 1)).reshape(e * o, i)
+    elif leaf.ndim == 4:                     # conv (KH,KW,in,out) -> (out,in,K)
+        kh, kw, ci, co = leaf.shape
+        w3d = jnp.transpose(leaf, (3, 2, 0, 1)).reshape(co, ci, kh * kw)
+        if method == "rtn":
+            return baselines.rtn(w3d.reshape(co, ci * kh * kw), bits,
+                                 scale_method=scale_method)
+        cfg = _method_cfg(method, bits, None, scale_method)
+        qt, _ = squant(w3d, cfg)
+        return qt
+    else:
+        raise ValueError(f"unsupported kernel rank {leaf.ndim}")
+
+    if method == "rtn":
+        return baselines.rtn(w2d, bits, scale_method=scale_method)
+    cfg = _method_cfg(method, bits, group_size, scale_method)
+    qt, _ = squant(w2d, cfg)
+    return qt
+
+
+def quantize_tree(params: Any, method: str = "squant", bits: int = 4,
+                  group_size: Optional[int] = 128, scale_method: str = "max",
+                  predicate: Optional[Callable] = None,
+                  dequantize: bool = False) -> Tuple[Any, QuantReport]:
+    """Quantize all matmul weights in a param tree.
+
+    dequantize=True returns float weights (fake-quant — for accuracy evals on
+    models whose forward pass expects dense arrays); otherwise leaves become
+    QuantizedTensor (real serving format).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; options {METHODS}")
+    pred = predicate or is_quantizable
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out_leaves = []
+    reports: List[LayerReport] = []
+    t_total = 0.0
+    for keypath, leaf in flat:
+        path = tuple(getattr(k, "key", getattr(k, "idx", str(k)))
+                     for k in keypath)
+        path = tuple(str(p) for p in path)
+        if not pred(path, leaf):
+            out_leaves.append(leaf)
+            continue
+        t0 = time.perf_counter()
+        qt = _quantize_leaf(leaf, method, bits, group_size, scale_method)
+        jax.block_until_ready(qt.data)
+        ms = (time.perf_counter() - t0) * 1e3
+        t_total += ms
+        reports.append(LayerReport("/".join(path), tuple(leaf.shape), ms,
+                                   method, bits))
+        if dequantize:
+            wq = qt.dequantize(leaf.dtype)
+            if leaf.ndim == 2:
+                out_leaves.append(wq.T)
+            elif leaf.ndim == 3:
+                e, i, o = leaf.shape
+                out_leaves.append(
+                    jnp.transpose(wq.reshape(e, o, i), (0, 2, 1)))
+            else:
+                kh, kw, ci, co = leaf.shape
+                w = wq.reshape(co, ci, kh, kw)
+                out_leaves.append(jnp.transpose(w, (2, 3, 1, 0)))
+        else:
+            out_leaves.append(qt)
+    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    return tree, QuantReport(reports, t_total, method, bits)

@@ -1,0 +1,143 @@
+"""Sequential NumPy reference of SQuant (Algorithms 1-4), with a flip log.
+
+This is a deliberately literal, loop-based transcription of the paper's
+pseudocode. It serves two purposes:
+
+1. An independent oracle for the vectorized JAX implementation
+   (`core/squant.py`) and the Pallas kernels — two implementations written
+   from different viewpoints must agree bit-exactly on the integer codes.
+2. The flip log (element, stage, and the running kernel/channel sums at flip
+   time) feeds the approximation-precision analysis of Appendix A.3
+   (`core/hessian.py`).
+
+Tie-breaking matches the vectorized code: stable sort, lower index wins among
+equal |perturbation|.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FlipEvent:
+    m: int                 # output channel
+    flat_idx: int          # flat index within the row
+    stage: str             # "K" | "C"
+    sign: float            # sign of δ before the flip (mutation is -sign)
+    delta_before: float    # element δ before flip
+    kernel_sum_before: float
+    row_sum_before: float
+
+
+def _topk_desc_stable(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest scores; stable (lower index wins ties)."""
+    order = np.argsort(-scores, kind="stable")
+    return order[:k]
+
+
+def squant_reference(w2d: np.ndarray, scale: np.ndarray, bits: int,
+                     group_size: Optional[int], enable_k: bool = True,
+                     enable_c: bool = True
+                     ) -> Tuple[np.ndarray, np.ndarray, List[FlipEvent]]:
+    """Returns (codes int8 (M,N), delta, flip_log)."""
+    m_sz, n_sz = w2d.shape
+    qmax = 2 ** (bits - 1) - 1
+    ws = w2d.astype(np.float64) / scale.reshape(m_sz, 1).astype(np.float64)
+
+    g = group_size if group_size is not None else n_sz
+    pad = (-n_sz) % g
+    if pad:
+        ws = np.pad(ws, ((0, 0), (0, pad)))
+    ng = ws.shape[1] // g
+
+    # SQuant-E
+    q = np.clip(np.round(ws), -qmax, qmax)
+    delta = q - ws
+    log: List[FlipEvent] = []
+
+    def flip_ok(mm, idx):
+        d = delta[mm, idx]
+        tgt = q[mm, idx] - np.sign(d)
+        return -qmax <= tgt <= qmax
+
+    row_sum = delta.sum(axis=1)
+
+    def do_flip(mm, idx, stage):
+        d = delta[mm, idx]
+        s = np.sign(d)
+        grp = idx // g
+        ks = delta[mm, grp * g:(grp + 1) * g].sum()
+        log.append(FlipEvent(mm, int(idx), stage, float(s), float(d),
+                             float(ks), float(row_sum[mm])))
+        q[mm, idx] -= s
+        delta[mm, idx] -= s
+        row_sum[mm] -= s
+
+    # SQuant-K (Algorithm 2 per kernel)
+    if enable_k and group_size is not None:
+        for m in range(m_sz):
+            for n in range(ng):
+                sl = slice(n * g, (n + 1) * g)
+                p = delta[m, sl].copy()
+                e = p.sum()
+                p[e * p <= 0] = 0.0                      # disable wrong-sign
+                for j in range(len(p)):
+                    if p[j] != 0 and not flip_ok(m, n * g + j):
+                        p[j] = 0.0
+                k = int(np.round(abs(e)))
+                k = min(k, int(np.count_nonzero(p)))
+                for j in _topk_desc_stable(np.abs(p), k):
+                    do_flip(m, n * g + j, "K")
+
+    # SQuant-C
+    if enable_c:
+        if group_size is None or not enable_k:
+            # whole row is one kernel: row-level SQuantFlip
+            for m in range(m_sz):
+                p = delta[m].copy()
+                e = p.sum()
+                p[e * p <= 0] = 0.0
+                for j in range(len(p)):
+                    if p[j] != 0 and not flip_ok(m, j):
+                        p[j] = 0.0
+                k = int(np.round(abs(e)))
+                k = min(k, int(np.count_nonzero(p)))
+                for j in _topk_desc_stable(np.abs(p), k):
+                    do_flip(m, j, "C")
+        else:
+            # Algorithm 4 candidates + channel-level Algorithm 2
+            for m in range(m_sz):
+                cand_idx = np.full(ng, -1)
+                cand_val = np.zeros(ng)
+                for n in range(ng):
+                    sl = slice(n * g, (n + 1) * g)
+                    d = delta[m, sl]
+                    e1 = d.sum()
+                    s1 = np.sign(e1)
+                    if s1 == 0:
+                        match = d != 0
+                    else:
+                        match = d * s1 > 0
+                    for j in range(g):
+                        if match[j] and not flip_ok(m, n * g + j):
+                            match[j] = False
+                    if not match.any():
+                        continue
+                    sc = np.where(match, np.abs(d), -1.0)
+                    j = int(np.argmax(sc))          # stable: first max
+                    cand_idx[n] = n * g + j
+                    cand_val[n] = d[j]
+                e_row = delta[m].sum()
+                elig = (cand_idx >= 0) & (cand_val * e_row > 0)
+                k_c = int(np.round(abs(e_row)))
+                k_c = min(k_c, int(elig.sum()))
+                sc = np.where(elig, np.abs(cand_val), -1.0)
+                for n in _topk_desc_stable(sc, k_c):
+                    do_flip(m, int(cand_idx[n]), "C")
+
+    q = q[:, :n_sz]
+    delta = delta[:, :n_sz]
+    return q.astype(np.int8), delta, log

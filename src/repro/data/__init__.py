@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic synthetic streams + byte tokenizer."""
+from repro.data.synthetic import synthetic_batches, markov_batches  # noqa: F401
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401

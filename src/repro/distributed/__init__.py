@@ -1,0 +1,4 @@
+"""Distribution: logical-axis sharding rules, mesh helpers, collectives."""
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules, param_sharding_rules, shard_act, set_axis_rules,
+    make_param_shardings, logical_to_mesh)

@@ -1,0 +1,286 @@
+"""Logical-axis sharding: the single place where model dimensions meet mesh
+axes.
+
+Model code annotates activations with *logical* axis names
+(``shard_act(x, ("batch", "seq", "embed"))``); parameters get specs from
+name/shape rules (``make_param_shardings``). The mapping logical→mesh lives
+in an ``AxisRules`` table so the same model lowers on a laptop (trivial mesh),
+a 256-chip pod, or the 512-chip 2-pod production mesh.
+
+Defaults implement the MaxText-standard regime for this scale:
+* DP over ('pod', 'data')   — batch dim
+* TP over 'model'           — heads / ff / vocab / experts
+* FSDP (ZeRO-3) over 'data' — every parameter's non-TP dim
+* SP over 'data'            — long-context KV/state sequence dim
+
+Divisibility-aware: a dim is only assigned a mesh axis when the axis size
+divides it (e.g. mixtral's 8 experts on a 16-way 'model' axis fall back to
+FSDP-only and the expert ffn dim takes TP instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical axis name → tuple of candidate mesh axes (first that fits)."""
+    rules: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+        ("batch",        (("pod", "data"), ("data",), None)),
+        ("seq",          (None,)),
+        ("seq_shard",    (("data",), None)),           # SP for long context
+        ("embed",        (None,)),
+        ("heads",        (("model",), None)),
+        ("kv_heads",     (("model",), None)),
+        ("seq_model",    (("model",), None)),
+        ("head_dim",     (None,)),
+        ("ff",           (("model",), None)),
+        ("vocab",        (("model",), None)),
+        ("experts",      (("model",), None)),
+        ("expert_ff",    (("model",), None)),
+        ("fsdp",         (("data",), None)),
+        ("conv",         (None,)),
+        ("state",        (None,)),
+    )
+
+    def lookup(self, name: str) -> Tuple:
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return (None,)
+
+
+_STATE = threading.local()
+
+
+def set_axis_rules(rules: Optional[AxisRules]):
+    _STATE.rules = rules
+
+
+def _get_rules() -> AxisRules:
+    return getattr(_STATE, "rules", None) or AxisRules()
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """Usable (non-Manual) axis sizes; works for Mesh and AbstractMesh.
+
+    Inside a shard_map, manual axes (e.g. 'pod' in the compressed-gradient
+    step) must not appear in sharding constraints — the per-shard program
+    only sees the remaining auto axes.
+    """
+    sizes = dict(mesh.shape)
+    try:
+        types = dict(zip(mesh.axis_names, mesh.axis_types))
+        manual = {n for n, t in types.items()
+                  if str(t).endswith("Manual")}
+        for n in manual:
+            sizes.pop(n, None)
+    except Exception:
+        pass
+    return sizes
+
+
+def logical_to_mesh(logical: Sequence[Optional[str]], shape: Sequence[int],
+                    mesh: Mesh, rules: Optional[AxisRules] = None) -> P:
+    """Resolve logical axes to a PartitionSpec, honouring divisibility and
+    never assigning one mesh axis twice."""
+    rules = rules or _get_rules()
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        assigned = None
+        if name is not None:
+            for cand in rules.lookup(name):
+                if cand is None:
+                    break
+                cand_t = cand if isinstance(cand, tuple) else (cand,)
+                if any(c not in sizes for c in cand_t):
+                    continue
+                if any(c in used for c in cand_t):
+                    continue
+                total = int(np.prod([sizes[c] for c in cand_t]))
+                if dim % total == 0:
+                    assigned = cand_t if len(cand_t) > 1 else cand_t[0]
+                    used.update(cand_t)
+                    break
+        out.append(assigned)
+    return P(*out)
+
+
+def shard_act(x: jax.Array, logical: Sequence[Optional[str]],
+              mesh: Optional[Mesh] = None) -> jax.Array:
+    """Annotate an activation with a sharding constraint if a mesh is active.
+
+    Outside a mesh context (unit tests, single-device smoke runs) this is an
+    identity — model code stays mesh-agnostic.
+    """
+    mesh = mesh or _current_mesh()
+    if mesh is None or getattr(mesh, "empty", True) or mesh.size == 1:
+        return x
+    spec = logical_to_mesh(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _current_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return None
+        return mesh
+    except Exception:
+        return None
+
+
+def shard_logits(logits: jax.Array) -> jax.Array:
+    """LM-head logits: vocab-sharded over 'model' when divisible (the
+    matmul-natural layout from the sharded embedding), otherwise
+    sequence-sharded over 'model' — never replicate a (B, S, V) f32 tensor
+    (a 200 GB/chip blow-up for 256k-vocab non-divisible models; found by
+    the dry-run)."""
+    mesh = _current_mesh()
+    if mesh is None or getattr(mesh, "empty", True) or mesh.size == 1:
+        return logits
+    sizes = _mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    if logits.shape[-1] % tp == 0:
+        return shard_act(logits, ("batch", None, "vocab"), mesh)
+    if logits.ndim == 3 and logits.shape[1] % tp == 0:
+        return shard_act(logits, ("batch", "seq_model", None), mesh)
+    return shard_act(logits, ("batch", None, None), mesh)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path/shape based)
+# ---------------------------------------------------------------------------
+# Conventions (repro.models):
+#   dense kernels    {"<proj>": {"w": (in, out)}}         — leaf name "w"
+#   expert banks     {"moe": {"wi": {"w": (E, in, out)}}} — "moe" in path
+#   embeddings       {"embedding": (V, d)}; lm head {"lm_head": {"w": (d, V)}}
+#   scanned stacks prepend one period dim ("periods" in path)
+#
+# Megatron-style placement: column-parallel projections put TP on the out
+# dim, row-parallel on the in dim; everything else gets FSDP on its largest
+# eligible dim. Divisibility fallbacks in logical_to_mesh handle the rest
+# (e.g. mixtral's 8 experts on model=16 fall back to expert-ff TP).
+
+_ROW_PARALLEL = {"wo", "wdown", "out_proj", "w_lora_b", "wv_cm"}
+_TP = "heads_flat"   # resolves to 'model'
+
+_PARAM_RULES = AxisRules(rules=AxisRules().rules + (
+    ("heads_flat", (("model",), None)),
+))
+
+
+def param_sharding_rules(path: Tuple[str, ...], leaf: Any) -> Tuple:
+    """Logical axes for a parameter leaf."""
+    shape = getattr(leaf, "shape", ())
+    rank = len(shape)
+    name = path[-1] if path else ""
+    parent = path[-2] if len(path) >= 2 else ""
+    stacked = "periods" in path or "layers" in path
+
+    def pad(spec: Tuple) -> Tuple:
+        """Prepend Nones for the stack dim(s) so spec matches rank."""
+        if len(spec) < rank:
+            return (None,) * (rank - len(spec)) + spec
+        return spec
+
+    if name == "embedding":
+        return pad(("vocab", "fsdp"))
+    if name == "conv_w":
+        return pad((None, "ff"))
+    if name in ("w", "w_q", "w_q4", "w_scale"):
+        if parent == "w" or parent == "":
+            return (None,) * rank
+        if parent in ("w_lora_a", "w_lora_b") and \
+                not os.environ.get("REPRO_LORA_TP"):
+            # rwkv decay LoRA: ~0.26 M params/layer — replicating them and
+            # duplicating the tiny matmul removes a (B,S,d) psum + the
+            # surrounding reshard per layer (§Perf hillclimb: the
+            # most-collective-bound cell). REPRO_LORA_TP=1 restores the
+            # naive TP sharding for the before/after measurement.
+            return pad(("fsdp", None))
+        if "lm_head" in path:
+            spec = ("fsdp", "vocab")
+        elif "moe" in path:                    # expert bank (E, in, out)
+            spec = ("experts", "fsdp", "expert_ff")
+        else:
+            key = parent
+            if key == "wv" and "cm" in path:
+                key = "wv_cm"                  # rwkv channel-mix down-proj
+            spec = (_TP, "fsdp") if key in _ROW_PARALLEL else ("fsdp", _TP)
+        if name in ("w_q", "w_q4"):            # quantized codes: (out, in)
+            spec = spec[:-2] + (spec[-1], spec[-2])
+        elif name == "w_scale":                # (out, 1)
+            spec = spec[:-2] + (spec[-1], None)
+        return pad(spec)
+    # vectors / norm gains / lerp factors / u bonus: replicate
+    return (None,) * rank
+
+
+def make_param_shardings(mesh: Mesh, params_shape: Any,
+                         rules: Optional[AxisRules] = None) -> Any:
+    """NamedSharding pytree for a params pytree (of arrays or
+    ShapeDtypeStructs)."""
+    rules = rules or _PARAM_RULES
+
+    def one(keypath, leaf):
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in keypath)
+        logical = param_sharding_rules(path, leaf)
+        spec = logical_to_mesh(logical, leaf.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding rules (serving)
+# ---------------------------------------------------------------------------
+
+_CACHE_LOGICAL: Dict[str, Tuple] = {
+    "k":       ("batch", "seq_cache", "kv_heads", "head_dim"),
+    "v":       ("batch", "seq_cache", "kv_heads", "head_dim"),
+    "k_scale": ("batch", "seq_cache", "kv_heads"),
+    "v_scale": ("batch", "seq_cache", "kv_heads"),
+    "c_kv":    ("batch", "seq_cache", "mla_rank"),
+    "k_rope":  ("batch", "seq_cache", None, None),
+    "h":       ("batch", "d_inner", None),
+    "conv":    ("batch", None, "d_inner"),
+    "wkv":     ("batch", "heads", None, None),
+    "x_tm":    ("batch", None),
+    "x_cm":    ("batch", None),
+    "enc_out": ("batch", None, None),
+}
+
+_CACHE_RULES = AxisRules(rules=(
+    # long-context SP: the cache sequence dim takes whatever DP axes the
+    # (possibly tiny) batch left unused — 500k decode shards its KV over them
+    ("seq_cache", (("pod", "data"), ("data",), None)),
+    ("mla_rank",  (("model",), None)),
+    ("d_inner",   (("model",), None)),
+    ("head_dim",  (("model",), None)),
+) + AxisRules().rules)
+
+
+def make_cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    def one(keypath, leaf):
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in keypath)
+        name = path[-1] if path else ""
+        logical = _CACHE_LOGICAL.get(name, (None,) * len(leaf.shape))
+        if len(logical) != len(leaf.shape):
+            stack = len(leaf.shape) - len(logical)
+            logical = (None,) * stack + tuple(logical)
+        spec = logical_to_mesh(logical, leaf.shape, mesh, _CACHE_RULES)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: quantized-weight matmul (the SQuant serving hot spot).
+
+Computes ``y = x @ dequant(Wq).T`` where ``Wq`` holds int8 codes (or int4
+packed two-per-byte) with per-channel or per-group scales.
+
+TPU mapping:
+* grid (B/TB, M/TM, N/TN) with TN == group_size (128 default) so one K-tile
+  sees exactly one scale per output row — the dequant is a tile-constant
+  multiply fused after the MXU dot.
+* codes are upcast to the activation dtype *inside VMEM* (the HBM traffic is
+  the int8/int4 bytes — this is the memory-roofline win quantization buys).
+* f32 accumulation in a VMEM scratch across the K grid dimension (TPU grids
+  iterate the last axis innermost, so the revisiting-accumulator pattern is
+  safe), scale applied per K-tile.
+* int4: a (TM, TN/2) packed block is sign-extended with arithmetic shifts and
+  re-interleaved — no gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """(R, C) int8 → (R, 2C) int8, little-nibble-first (matches qtypes)."""
+    lo = (packed << 4) >> 4          # arithmetic shifts sign-extend
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+
+
+def _dequant_matmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                           n_tiles: int, packed: bool):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...]
+    if packed:
+        w = _unpack_nibbles(w)
+    x = x_ref[...]
+    part = jnp.dot(x, w.astype(x.dtype).T,
+                   preferred_element_type=jnp.float32)     # (TB, TM)
+    acc_ref[...] += part * s_ref[...].reshape(1, -1)       # scale (TM,1)
+
+    @pl.when(j == n_tiles - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "tb", "tm", "interpret", "out_dtype"))
+def dequant_matmul_pallas(x: jnp.ndarray, codes: jnp.ndarray,
+                          scale: jnp.ndarray, *, bits: int,
+                          group_size: int = 128, tb: int = 128, tm: int = 128,
+                          interpret: bool = False, out_dtype=None):
+    """y[B, M] = x[B, N] @ (codes[M, N] * scale).T
+
+    ``codes``: int8; when bits<=4 they are packed (M, N/2) two-per-byte.
+    ``scale``: (M, 1) per-channel or (M, N/group_size) per-group f32.
+    """
+    b, n = x.shape
+    packed = bits <= 4
+    m = codes.shape[0]
+    n_codes = codes.shape[1] * (2 if packed else 1)
+    if n_codes != n:
+        raise ValueError(f"x has N={n} but codes unpack to {n_codes}")
+    if n % group_size != 0:
+        raise ValueError(f"N={n} not divisible by group_size={group_size}")
+    ng = n // group_size
+    scale_full = jnp.broadcast_to(scale.astype(jnp.float32).reshape(m, -1),
+                                  (m, ng)) if scale.shape[1] != ng else scale
+    out_dtype = out_dtype or x.dtype
+
+    tb = min(tb, b)
+    tm = min(tm, m)
+    if b % tb or m % tm:
+        raise ValueError(f"B={b} and M={m} must divide tiles ({tb},{tm})")
+    tn = group_size
+    n_tiles = ng
+    wt = tn // 2 if packed else tn
+
+    kern = functools.partial(_dequant_matmul_kernel, n_tiles=n_tiles,
+                             packed=packed)
+    return pl.pallas_call(
+        kern,
+        grid=(b // tb, m // tm, n_tiles),
+        in_specs=[
+            pl.BlockSpec((tb, tn), lambda i, k, j: (i, j)),
+            pl.BlockSpec((tm, wt), lambda i, k, j: (k, j)),
+            pl.BlockSpec((tm, 1), lambda i, k, j: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tb, tm), lambda i, k, j: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((b, m), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tb, tm), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scale_full)

@@ -1,0 +1,72 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy:
+* On TPU backends the compiled Pallas kernels run natively.
+* On CPU (this container) ``interpret=True`` executes the kernel body for
+  correctness validation; the pure-jnp oracle is the default production
+  fallback because interpret mode is slow for large tensors.
+
+``use_pallas='auto'`` picks TPU→pallas, CPU→reference. Tests force
+``use_pallas='interpret'`` to exercise the kernel bodies.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.squant_flip import squant_pallas
+from repro.quant.qtypes import QuantizedTensor
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def squant_flip(w2d: jnp.ndarray, scale: jnp.ndarray, *, bits: int,
+                group_size: int, enable_k: bool = True, enable_c: bool = True,
+                use_pallas: str = "auto", tm: int = 8) -> jnp.ndarray:
+    """SQuant codes for an (M, N) matrix with per-channel scales (M, 1).
+
+    The Pallas path implements the standard E, E&K and E&K&C configurations;
+    the E&C-without-K ablation (row-level flip) is reference-only.
+    """
+    if use_pallas == "auto":
+        use_pallas = "pallas" if _on_tpu() else "ref"
+    if use_pallas in ("pallas", "interpret") and (enable_k or not enable_c):
+        return squant_pallas(w2d, scale, bits=bits, group_size=group_size,
+                             enable_k=enable_k, enable_c=enable_c, tm=tm,
+                             interpret=(use_pallas == "interpret"))
+    return _ref.squant_ref(w2d, scale, bits=bits, group_size=group_size,
+                           enable_k=enable_k, enable_c=enable_c)
+
+
+def dequant_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
+                   group_size: int = 128, use_pallas: str = "auto",
+                   tb: int = 128, tm: int = 128) -> jnp.ndarray:
+    """y = x @ dequant(qt).T for a (out, in)-major QuantizedTensor."""
+    if use_pallas == "auto":
+        use_pallas = "pallas" if _on_tpu() else "ref"
+    import math
+    m = qt.shape[0]
+    n = math.prod(qt.shape[1:])
+    scale = qt.scale.reshape(m, -1)
+    if use_pallas in ("pallas", "interpret"):
+        b = x.shape[0]
+        # tile sizes must divide; shrink for small operands
+        tb_eff = max(1, min(tb, b))
+        while b % tb_eff:
+            tb_eff -= 1
+        tm_eff = max(1, min(tm, m))
+        while m % tm_eff:
+            tm_eff -= 1
+        gs = group_size if n % group_size == 0 else n
+        return dequant_matmul_pallas(
+            x, qt.data, scale, bits=qt.bits, group_size=gs, tb=tb_eff,
+            tm=tm_eff, interpret=(use_pallas == "interpret"))
+    return _ref.dequant_matmul_ref(x, qt.data, scale, bits=qt.bits,
+                                   group_size=group_size
+                                   if n % group_size == 0 else n)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``squant_ref`` delegates to the vectorized core (itself bit-exact against the
+sequential NumPy transcription of Algorithms 1-4), so the chain of evidence is
+  Pallas(interpret) == vectorized jnp == sequential NumPy pseudocode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.squant import squant_codes
+from repro.quant.qtypes import unpack_int4
+
+
+def squant_ref(w2d: jnp.ndarray, scale: jnp.ndarray, *, bits: int,
+               group_size: Optional[int], enable_k: bool = True,
+               enable_c: bool = True) -> jnp.ndarray:
+    codes, _, _ = squant_codes(w2d, scale, bits=bits, group_size=group_size,
+                               enable_k=enable_k, enable_c=enable_c)
+    return codes
+
+
+def dequant_matmul_ref(x: jnp.ndarray, codes: jnp.ndarray,
+                       scale: jnp.ndarray, *, bits: int,
+                       group_size: int = 128) -> jnp.ndarray:
+    """y = x @ dequant(codes).T with per-channel or per-group scales."""
+    m = codes.shape[0]
+    c = unpack_int4(codes) if bits <= 4 else codes
+    c = c.astype(jnp.float32)
+    n = c.shape[1]
+    ng = n // group_size
+    s = jnp.broadcast_to(scale.astype(jnp.float32).reshape(m, -1), (m, ng))
+    w = (c.reshape(m, ng, group_size) * s[..., None]).reshape(m, n)
+    return (x.astype(jnp.float32) @ w.T).astype(x.dtype)

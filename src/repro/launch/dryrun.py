@@ -1,0 +1,602 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). 512 host devices emulate the 2-pod production mesh.
+# CI override (still before any jax import): debug meshes for subprocess
+# tests use 8 devices.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import math          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import warnings      # noqa: E402
+
+warnings.filterwarnings("ignore")
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs      # noqa: E402
+from repro.distributed.sharding import (logical_to_mesh,      # noqa: E402
+                                        make_cache_shardings,
+                                        make_param_shardings)
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.models.model import build_model                    # noqa: E402
+from repro.training.optimizer import AdamWConfig, adamw_init  # noqa: E402
+from repro.training.train_loop import make_train_step         # noqa: E402
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link (conservative single-link figure)
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8,
+                "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "f8e4m3fn": 1, "f8e5m2": 1,
+                "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_TYPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9]+),([0-9]+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(ls: str) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(ls)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(ls)
+    if m:
+        return int(m.group(2))      # [groups, group_size]<=[N]
+    return 1
+
+
+_COMP_DEF_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """name → list of instruction lines, plus the entry computation name."""
+    comps = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_DEF_RE.match(line)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps, entry
+
+
+def _loop_multipliers(comps, entry):
+    """Execution-count multiplier per computation: while bodies run
+    trip-count times (trip read from the largest constant in the loop's
+    condition computation — scans compare the induction var against it)."""
+    mult = {name: 0.0 for name in comps}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop()
+        m = mult[name]
+        for ls in comps.get(name, ()):
+            wm = _WHILE_RE.search(ls)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comps.get(cond, ())))]
+                trip = max(consts) if consts else 1
+                mult[body] = mult.get(body, 0.0) + m * trip
+                if body not in seen:
+                    seen.add(body)
+                    order.append(body)
+                continue
+            for callee in _CALLS_RE.findall(ls):
+                if callee in comps and callee not in seen:
+                    mult[callee] = mult.get(callee, 0.0) + m
+                    seen.add(callee)
+                    order.append(callee)
+    for name in comps:
+        mult.setdefault(name, 1.0)
+        if mult[name] == 0.0:
+            mult[name] = 1.0   # unreached (e.g. dead fusions): count once
+    return mult
+
+
+def collective_bytes_from_hlo(hlo_text: str, loop_aware: bool = True) -> dict:
+    """Per-chip *wire* bytes of every collective in the (post-SPMD,
+    per-device) HLO module — operand-size convention: all-reduce≈result,
+    all-gather≈result/k, reduce-scatter≈result·k, a2a/cp≈result.
+    loop_aware=True multiplies collectives inside while bodies (scans) by
+    their trip counts, recovering totals XLA's flat text hides."""
+    comps, entry = _split_computations(hlo_text)
+    mult = _loop_multipliers(comps, entry) if loop_aware else \
+        {n: 1.0 for n in comps}
+    out = {k: 0.0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for cname, lines in comps.items():
+        w = mult.get(cname, 1.0)
+        for ls in lines:
+            if "-done(" in ls:
+                continue
+            for kind in _COLLECTIVES:
+                if f" {kind}(" not in ls and f" {kind}-start(" not in ls:
+                    continue
+                lhs = ls.split(f" {kind}", 1)[0]
+                sizes = [_shape_bytes(d, s)
+                         for d, s in _TYPE_RE.findall(lhs)]
+                res = max(sizes) if sizes else 0.0
+                k = _group_size(ls)
+                if kind == "all-gather":
+                    b = res / max(k, 1)
+                elif kind == "reduce-scatter":
+                    b = res * k
+                else:
+                    b = res
+                out[kind] += b * w
+                count[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs
+# ---------------------------------------------------------------------------
+
+def count_params(model) -> dict:
+    shapes = model.param_shapes()
+    total = 0
+    expert = 0
+    embed = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for kp, leaf in flat:
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in kp)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe" in path and path[-1] == "w":
+            expert += n
+        if path[-1] == "embedding" or "lm_head" in path:
+            embed += n
+    cfg = model.cfg
+    active = total - expert
+    if cfg.moe is not None and expert:
+        active += expert * cfg.moe.top_k / cfg.moe.n_experts
+    return {"total": total, "expert": expert, "embed": embed,
+            "active": int(active),
+            "active_nonembed": int(active - embed)}
+
+
+def model_flops(model, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens for training, 2·N_active·tokens for
+    forward-only (prefill/decode); N excludes embedding tables (lookup) but
+    includes the LM head matmul."""
+    p = count_params(model)
+    cfg = model.cfg
+    n = p["active_nonembed"] + cfg.d_model * cfg.vocab  # head matmul
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry-run
+# ---------------------------------------------------------------------------
+
+def auto_microbatches(cfg, shape, dp_total: int, budget_gb: float = 2.0
+                      ) -> int:
+    """Pick grad-accum steps so remat-stored period inputs + the live
+    logits block fit the per-chip activation budget."""
+    from repro.models.transformer import n_periods
+    b_loc = max(1, shape.global_batch // dp_total)
+    periods = n_periods(cfg) if cfg.scan_layers else cfg.n_layers
+    per_elem = periods * shape.seq_len * cfg.d_model * 2 / 1e9
+    # logits + softmax temps: f32+bf16 ≈ 6 B/entry, sharded 16-way over
+    # 'model' (vocab- or seq-sharded; see distributed.shard_logits)
+    per_elem += shape.seq_len * cfg.vocab * 6 / 16 / 1e9
+    micro = 1
+    while micro < b_loc and (b_loc / micro) * per_elem > budget_gb:
+        micro *= 2
+    return min(micro, b_loc)
+
+
+def analytic_memory_floor(model, shape, n_chips: int, quant_kv: bool,
+                          weights_bits: int = 0) -> float:
+    """Lower bound on per-chip HBM traffic per step (bytes): parameters
+    actually touched + KV/state cache + gross activation IO. The XLA
+    "bytes accessed" metric is an unfused upper bound; the truth on TPU
+    lies between — both are reported (§Roofline methodology)."""
+    cfg = model.cfg
+    p = count_params(model)
+    wbytes = (weights_bits / 8.0) if weights_bits else 2.0
+    pb = p["total"] * wbytes                 # bf16 or int8/int4 weights
+    act_tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+    act_io = act_tokens * cfg.d_model * cfg.n_layers * 2 * 4
+    if shape.kind == "train":
+        # fwd + bwd + remat reads of weights, grad writes, fp32 opt states
+        total = pb * 3 + p["total"] * 4 + p["total"] * 16 + act_io * 3
+    elif shape.kind == "prefill":
+        total = pb + act_io
+    else:
+        kv_bytes_token = 1 if quant_kv else 2
+        if cfg.rwkv:
+            cache = (cfg.d_model // cfg.rwkv_head_dim) * cfg.rwkv_head_dim \
+                ** 2 * 4 * cfg.n_layers * shape.global_batch
+        elif cfg.mla is not None:
+            cache = (cfg.mla.kv_lora + cfg.mla.rope_dim) * shape.seq_len \
+                * shape.global_batch * kv_bytes_token * cfg.n_layers
+        else:
+            slots = min(shape.seq_len, cfg.window or shape.seq_len)
+            n_attn = cfg.n_layers if cfg.block_pattern is None else \
+                cfg.n_layers // 8
+            cache = 2 * slots * cfg.n_kv_heads * cfg.head_dim \
+                * shape.global_batch * kv_bytes_token * n_attn
+        active_pb = p["active"] * wbytes
+        total = active_pb + cache + act_io
+    return total / n_chips
+
+
+def _batch_shardings(mesh, spec_tree):
+    def one(k, leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return jax.sharding.NamedSharding(
+            mesh, logical_to_mesh(logical, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, spec_tree)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches: int = 0, quant_kv: bool = False,
+             overrides: dict = None, tag: str = "",
+             costing: bool = False, depth_periods: int = 0,
+             shape_obj=None, weights_bits: int = 0) -> dict:
+    """One dry-run cell.
+
+    costing=False → the production program (scan-over-layers, chunked
+    mixers, grad-accum): memory_analysis is the HBM-fit proof; collectives
+    are loop-count-corrected from the HLO.
+    costing=True  → unrolled, unsharded, depth-truncated lowering: XLA
+    cost_analysis does not multiply loop trip counts, so flops/bytes are
+    measured with every iteration visible. ``depth_periods`` truncates the
+    (homogeneous) stack; ``costing_cell`` extrapolates 1→2 periods to the
+    full depth (exact for layer-homogeneous models).
+    """
+    shape = shape_obj or SHAPES[shape_name]
+    cfg = get_config(arch)
+    if costing:
+        over = dict(overrides or {})
+        over.setdefault("scan_layers", False)
+        over.setdefault("unroll_chunks", True)
+        over.setdefault("attn_q_chunk", shape.seq_len)
+        over.setdefault("mamba_chunk", shape.seq_len)
+        over.setdefault("rwkv_chunk", min(512, shape.seq_len))
+        if depth_periods:
+            from repro.models.transformer import layer_plan
+            plen = len(layer_plan(cfg))
+            over["n_layers"] = plen * depth_periods
+            if cfg.encoder_layers:
+                over["encoder_layers"] = max(1, depth_periods)
+        overrides = over
+        microbatches = 1
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "mesh": "multipod" if multi_pod else "pod", "tag": tag,
+                "reason": "full-attention arch at 512k decode"}
+    mesh_tag = "multipod" if multi_pod else "pod"
+    debug = bool(os.environ.get("REPRO_DRYRUN_DEBUG_MESH"))
+    n_chips = (8 if debug else 512) if multi_pod else (8 if debug else 256)
+    if costing:
+        # single-device, unsharded: no SPMD pass — totals are exact
+        # (unrolled loops) and divide by the production chip count.
+        mesh = None
+        dp_total = 32 if multi_pod else 16
+    elif debug:
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(multi_pod=multi_pod)
+        jax.sharding.set_mesh(mesh)
+        dp_total = int(np.prod([s for a, s in zip(mesh.axis_names,
+                                                  mesh.devices.shape)
+                                if a in ("pod", "data")]))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        jax.sharding.set_mesh(mesh)
+        dp_total = int(np.prod([s for a, s in zip(mesh.axis_names,
+                                                  mesh.devices.shape)
+                                if a in ("pod", "data")]))
+    model = build_model(cfg)
+
+    params_sh = model.param_shapes()
+    if weights_bits:
+        from repro.quant.apply import quantized_param_shapes
+        params_sh = quantized_param_shapes(params_sh, weights_bits)
+    p_shard = make_param_shardings(mesh, params_sh) if mesh else None
+    in_spec = model.input_specs(shape)
+    b_shard = _batch_shardings(mesh, in_spec) if mesh else None
+
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+              "status": "ok", "costing": costing, "n_chips": n_chips,
+              "weights_bits": weights_bits, "quant_kv": quant_kv,
+              "params": count_params(model),
+              "model_flops": model_flops(model, shape), "tag": tag}
+
+    if shape.kind == "train":
+        micro = microbatches or auto_microbatches(cfg, shape, dp_total)
+        result["microbatches"] = micro
+        opt_sh = jax.eval_shape(adamw_init, params_sh)
+        o_shard = make_param_shardings(mesh, opt_sh) if mesh else None
+        step = make_train_step(
+            model, AdamWConfig(), microbatches=micro,
+            grad_reduce_dtype=jnp.bfloat16
+            if os.environ.get("REPRO_BF16_GRAD_REDUCE") else None)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1)) if mesh else \
+            jax.jit(step, donate_argnums=(0, 1))
+        lowered = jitted.lower(params_sh, opt_sh, in_spec)
+    elif shape.kind == "prefill":
+        cache_sh = model.cache_shapes(shape.global_batch, shape.seq_len,
+                                      quantize_kv=quant_kv)
+        c_shard = make_cache_shardings(mesh, cache_sh) if mesh else None
+        jitted = jax.jit(model.prefill,
+                         in_shardings=(p_shard, b_shard, c_shard),
+                         out_shardings=(None, None),
+                         donate_argnums=(2,)) if mesh else \
+            jax.jit(model.prefill, donate_argnums=(2,))
+        lowered = jitted.lower(params_sh, in_spec, cache_sh)
+    else:  # decode
+        cache_sh = model.cache_shapes(shape.global_batch, shape.seq_len,
+                                      quantize_kv=quant_kv)
+        c_shard = make_cache_shardings(mesh, cache_sh) if mesh else None
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        t_shard = _batch_shardings(mesh, tok) if mesh else None
+        jitted = jax.jit(model.decode_step,
+                         in_shardings=(p_shard, t_shard, c_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(2,)) if mesh else \
+            jax.jit(model.decode_step, donate_argnums=(2,))
+        lowered = jitted.lower(params_sh, tok, cache_sh)
+
+    result["lower_s"] = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            result[attr] = int(v)
+    arg_b = result.get("argument_size_in_bytes", 0)
+    tmp_b = result.get("temp_size_in_bytes", 0)
+    out_b = result.get("output_size_in_bytes", 0)
+    alias_b = result.get("alias_size_in_bytes", 0)
+    result["hbm_per_chip_gb"] = (arg_b + tmp_b + out_b - alias_b) / 1e9
+    result["fits_16gb"] = result["hbm_per_chip_gb"] < 16.0
+
+    cost = compiled.cost_analysis() or {}
+    result["hlo_flops"] = float(cost.get("flops", -1.0))
+    result["hlo_bytes"] = float(cost.get("bytes accessed", -1.0))
+
+    hlo = compiled.as_text()
+    result["collectives"] = collective_bytes_from_hlo(hlo, loop_aware=True)
+    result["hlo_lines"] = hlo.count("\n")
+
+    # roofline terms (seconds per chip per step). For costing artifacts the
+    # totals are whole-model (single device): divide by production chips.
+    div = n_chips if costing else 1
+    coll_b = result["collectives"]["total"]
+    flops = max(result["hlo_flops"], 0.0) / div
+    hbytes = max(result["hlo_bytes"], 0.0) / div
+    result["memory_floor_bytes"] = analytic_memory_floor(
+        model, shape, n_chips, quant_kv, weights_bits)
+    result["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbytes / HBM_BW,
+        "memory_floor_s": result["memory_floor_bytes"] / HBM_BW,
+        "collective_s": coll_b / ICI_BW,
+        "model_flops_ratio": (result["model_flops"] / n_chips) / flops
+        if flops > 0 else None,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: result["roofline"][k])
+    result["roofline"]["dominant"] = dom
+    return result
+
+
+def costing_cell(arch: str, shape_name: str, multi_pod: bool,
+                 quant_kv: bool = False, overrides: dict = None,
+                 tag: str = "cost") -> dict:
+    """Loop-complete flops/bytes by depth extrapolation: lower the unrolled
+    model at 1 and 2 periods and extend linearly to the full depth — exact
+    for layer-homogeneous stacks (all ten archs)."""
+    from repro.models.transformer import n_periods
+    cfg_full = get_config(arch)
+    if overrides:
+        cfg_full = dataclasses.replace(cfg_full, **overrides)
+    periods = n_periods(cfg_full)
+    shape = SHAPES[shape_name]
+    # per-device-scale batch: exact for dense models (flops linear in batch)
+    # and faithful for MoE, whose dispatch tensors scale with the *local*
+    # token count in the production sharded program.
+    dp_total = 32 if multi_pod else 16
+    cost_batch = max(1, shape.global_batch // dp_total)
+    cost_shape = dataclasses.replace(shape, global_batch=cost_batch)
+    batch_scale = shape.global_batch / cost_batch
+    r1 = run_cell(arch, shape_name, multi_pod, quant_kv=quant_kv,
+                  overrides=overrides, tag=tag, costing=True,
+                  depth_periods=1, shape_obj=cost_shape)
+    if r1.get("status") != "ok":
+        return r1
+    if periods > 1:
+        r2 = run_cell(arch, shape_name, multi_pod, quant_kv=quant_kv,
+                      overrides=overrides, tag=tag, costing=True,
+                      depth_periods=2, shape_obj=cost_shape)
+        if r2.get("status") != "ok":
+            return r2
+        f = r1["hlo_flops"] + (periods - 1) * (r2["hlo_flops"]
+                                               - r1["hlo_flops"])
+        b = r1["hlo_bytes"] + (periods - 1) * (r2["hlo_bytes"]
+                                               - r1["hlo_bytes"])
+        r1["compile_s"] += r2["compile_s"]
+    else:
+        f, b = r1["hlo_flops"], r1["hlo_bytes"]
+    f *= batch_scale
+    b *= batch_scale
+    model = build_model(cfg_full)
+    n_chips = r1["n_chips"]
+    floor = analytic_memory_floor(model, shape, n_chips, quant_kv)
+    r1.update({
+        "hlo_flops": f, "hlo_bytes": b, "extrapolated_periods": periods,
+        "batch_scale": batch_scale,
+        "params": count_params(model),
+        "model_flops": model_flops(model, shape),
+        "memory_floor_bytes": floor,
+    })
+    r1["roofline"] = {
+        "compute_s": f / n_chips / PEAK_FLOPS,
+        "memory_s": b / n_chips / HBM_BW,
+        "memory_floor_s": floor / HBM_BW,
+        "collective_s": 0.0,       # costing is unsharded; see prod artifact
+        "model_flops_ratio": (r1["model_flops"] / n_chips)
+        / (f / n_chips) if f > 0 else None,
+    }
+    r1["roofline"]["dominant"] = ("compute_s"
+                                  if r1["roofline"]["compute_s"]
+                                  >= r1["roofline"]["memory_s"]
+                                  else "memory_s")
+    # drop misleading memory numbers (unrolled + no sharding)
+    for k in ("hbm_per_chip_gb", "fits_16gb"):
+        r1.pop(k, None)
+    return r1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--quant-kv", action="store_true")
+    ap.add_argument("--costing", action="store_true",
+                    help="unrolled lowering for exact flops/collectives")
+    ap.add_argument("--weights-bits", type=int, default=0,
+                    choices=[0, 4, 8],
+                    help="serve with int8/int4 SQuant weights (decode/"
+                         "prefill cells)")
+    ap.add_argument("--mla-absorb", action="store_true",
+                    help="decode-time MLA weight absorption (minicpm3)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=ART_DIR)
+    args = ap.parse_args()
+    if args.costing and not args.tag:
+        args.tag = "cost"
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                name = f"{arch}__{shape}__{m}"
+                if args.tag:
+                    name += f"__{args.tag}"
+                path = os.path.join(args.out, name + ".json")
+                print(f"=== {name} ===", flush=True)
+                overrides = None
+                if args.mla_absorb:
+                    cfg0 = get_config(arch)
+                    if cfg0.mla is not None:
+                        overrides = {"mla": dataclasses.replace(
+                            cfg0.mla, absorb=True)}
+                try:
+                    if args.costing:
+                        res = costing_cell(arch, shape, m == "multipod",
+                                           args.quant_kv, tag=args.tag,
+                                           overrides=overrides)
+                    else:
+                        res = run_cell(arch, shape, m == "multipod",
+                                       args.microbatches, args.quant_kv,
+                                       tag=args.tag, overrides=overrides,
+                                       weights_bits=args.weights_bits)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    res = {"arch": arch, "shape": shape, "mesh": m,
+                           "status": "error", "error": repr(e)[:2000],
+                           "tag": args.tag}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                if status == "ok":
+                    r = res["roofline"]
+                    hbm = res.get("hbm_per_chip_gb")
+                    hbm_s = f"hbm/chip={hbm:.2f}GB " if hbm is not None \
+                        else ""
+                    print(f"  ok compile={res['compile_s']:.1f}s {hbm_s}"
+                          f"compute={r['compute_s']*1e3:.2f}ms "
+                          f"memory={r['memory_s']*1e3:.2f}ms "
+                          f"coll={r['collective_s']*1e3:.2f}ms "
+                          f"dom={r['dominant']}", flush=True)
+                else:
+                    print(f"  {status}: {res.get('reason', res.get('error'))}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

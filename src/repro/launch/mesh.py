@@ -1,0 +1,26 @@
+"""Production mesh factories.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (required: the dry-run overrides the device count before
+any jax initialization, and smoke tests must keep seeing one device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production mesh: 16×16 per pod, 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Scaled-down mesh (8 devices) with the production topology, for CI
+    subprocess tests."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

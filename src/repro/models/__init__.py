@@ -1,0 +1,1 @@
+"""Model zoo: composable JAX definitions for the assigned architectures."""

@@ -1,0 +1,416 @@
+"""Attention: GQA / MQA / sliding-window / MLA, with KV caches for decode.
+
+Grouped-query attention uses the grouped einsum form (no materialized KV
+repeat). Sliding-window decode keeps a ring-buffer cache of window size
+(O(window) state — the sub-quadratic path mixtral uses for long contexts).
+MLA (MiniCPM3/DeepSeek-style) caches the *compressed* c_kv + shared RoPE key,
+reconstructing K/V per step.
+
+KV caches optionally store int8 codes with per-(token, head) scales
+(``quantize_kv``): a serving-memory optimization SQuant's weight format pairs
+with (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.layers import _init_dense, apply_rotary, init_norm, linear, rms_norm
+
+NEG_INF = -2.0 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora: int = 768
+    kv_lora: int = 256
+    nope_dim: int = 64
+    rope_dim: int = 32
+    v_dim: int = 64
+    # Decode-time weight absorption (DeepSeek-style): fold kv_up's key half
+    # into the query and its value half into the output, so attention runs
+    # directly against the compressed cache — O(S·kv_lora·H) per step
+    # instead of O(S·kv_lora·H·(nope+v)) for re-expanding the cache.
+    absorb: bool = False
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    keys = jax.random.split(key, 8)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_dim = m.nope_dim + m.rope_dim
+        p = {
+            "q_down": _init_dense(keys[0], d, m.q_lora),
+            "q_norm": init_norm(m.q_lora),
+            "q_up": _init_dense(keys[1], m.q_lora, cfg.n_heads * qk_dim),
+            "kv_down": _init_dense(keys[2], d, m.kv_lora + m.rope_dim),
+            "kv_norm": init_norm(m.kv_lora),
+            "kv_up": _init_dense(keys[3], m.kv_lora,
+                                 cfg.n_heads * (m.nope_dim + m.v_dim)),
+            "wo": _init_dense(keys[4], cfg.n_heads * m.v_dim, d),
+        }
+        return p
+    p = {
+        "wq": _init_dense(keys[0], d, cfg.n_heads * hd),
+        "wk": _init_dense(keys[1], d, cfg.n_kv_heads * hd),
+        "wv": _init_dense(keys[2], d, cfg.n_kv_heads * hd),
+        "wo": _init_dense(keys[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_ln"] = init_norm(hd)
+        p["k_ln"] = init_norm(hd)
+    return p
+
+
+def init_cross_attention(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    keys = jax.random.split(key, 4)
+    return {
+        "wq": _init_dense(keys[0], d, cfg.n_heads * hd),
+        "wk": _init_dense(keys[1], d, cfg.n_heads * hd),
+        "wv": _init_dense(keys[2], d, cfg.n_heads * hd),
+        "wo": _init_dense(keys[3], cfg.n_heads * hd, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV cache (optionally int8)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16, quantize: bool = False,
+                  window: Optional[int] = None) -> Dict[str, Any]:
+    slots = min(max_len, window) if window else max_len
+    shape = (batch, slots, n_kv, head_dim)
+    if quantize:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quant_tok(x):
+    """(B, S, KV, D) → int8 codes + per-(B,S,KV) scale."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    codes = jnp.round(x / scale[..., None]).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _cache_write(cache, k, v, pos, window):
+    """Write new k/v (B, S, KV, D) at absolute position ``pos``."""
+    slots = cache["k"].shape[1]
+    s = k.shape[1]
+    if window and s >= slots:
+        # ring buffer: keep the last ``slots`` tokens, each at slot p%slots
+        shift = (pos + s) % slots
+        k = jnp.roll(k[:, -slots:], shift, axis=1)
+        v = jnp.roll(v[:, -slots:], shift, axis=1)
+        idx = 0
+    else:
+        idx = (pos % slots) if window else pos
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = _quant_tok(k)
+        vq, vs = _quant_tok(v)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, idx, 1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, idx, 1)
+        cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, idx, 1)
+        cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, idx, 1)
+        return cache
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), idx, 1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), idx, 1)
+    return cache
+
+
+def _cache_read(cache) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if "k_scale" in cache:
+        k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
+        v = cache["v"].astype(jnp.float32) * cache["v_scale"][..., None]
+        return k, v
+    return cache["k"], cache["v"]
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _grouped_attention(q, k, v, mask, softmax_scale) -> jnp.ndarray:
+    """q: (B,S,H,D), k/v: (B,T,KV,Dv); H = KV * rep. mask: (S,T) or
+    (B,1,1,S,T) additive. Used for decode (S small): no KV repeat."""
+    b, s, h, dq = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, s, kv, rep, dq)
+    scores = jnp.einsum("bskrd,btkd->bkrst", qg, k) * softmax_scale
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        scores = scores + mask
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", p, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+Q_CHUNK = 1024   # query-block size bounding the (B,H,Cq,T) score tensor
+
+
+def _chunked_attention(q, k, v, *, scale, causal: bool,
+                       window: Optional[int] = None,
+                       q_chunk: int = Q_CHUNK,
+                       unroll: bool = False) -> jnp.ndarray:
+    """Train/prefill attention: KV repeated to H heads (so scores shard over
+    the TP axis) and queries processed in blocks — the (B, H, Cq, T) block,
+    not (B, H, S, T), bounds the working set. Softmax sees the full key axis
+    per row, so this is exact (no online-softmax merge needed).
+
+    q: (B,S,H,D); k/v: (B,T,KV,Dv) — repeated internally when KV < H.
+    """
+    b, s, h, dq = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    def block(qc, row0):
+        scores = jnp.einsum("bshd,bthd->bhst", qc, k) * scale
+        scores = shard_act(scores.astype(jnp.float32),
+                           ("batch", "heads", None, None))
+        if causal:
+            rows = row0 + jnp.arange(qc.shape[1])
+            cols = jnp.arange(t)
+            ok = cols[None, :] <= rows[:, None]
+            if window is not None:
+                ok &= cols[None, :] > rows[:, None] - window
+            scores = jnp.where(ok[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhst,bthd->bshd", p, v)
+
+    if s <= q_chunk or s % q_chunk != 0:
+        return block(q, 0)
+    nc = s // q_chunk
+    qr = q.reshape(b, nc, q_chunk, h, dq).swapaxes(0, 1)
+    if unroll:
+        outs = jnp.stack([block(qr[i], i * q_chunk) for i in range(nc)])
+    else:
+        offs = jnp.arange(nc) * q_chunk
+
+        def body(_, qc_off):
+            qc, off = qc_off
+            return 0, block(qc, off)
+
+        _, outs = jax.lax.scan(body, 0, (qr, offs))
+    return outs.swapaxes(0, 1).reshape(b, s, h, v.shape[-1])
+
+
+def causal_mask(s: int, t: Optional[int] = None,
+                window: Optional[int] = None) -> jnp.ndarray:
+    t = t or s
+    qi = jnp.arange(s)[:, None] + (t - s)     # absolute query positions
+    ki = jnp.arange(t)[None, :]
+    ok = ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def attention(params, x, *, cfg, rope, mode: str = "train",
+              cache: Optional[dict] = None, pos: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Self-attention.
+
+    mode: "train"/"prefill" (full sequence, causal (+window) mask, prefill
+    also fills the cache) or "decode" (single new token against the cache).
+    """
+    if cfg.mla is not None:
+        return _mla_attention(params, x, cfg=cfg, rope=rope, mode=mode,
+                              cache=cache, pos=pos)
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    cos_t, sin_t = rope                      # (s, hd/2) for current tokens
+    q = linear(params["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = linear(params["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(params["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(params["q_ln"], q)
+        k = rms_norm(params["k_ln"], k)
+    q = apply_rotary(q, cos_t, sin_t)
+    k = apply_rotary(k, cos_t, sin_t)
+    q = shard_act(q, ("batch", None, "heads", None))
+    scale = hd ** -0.5
+
+    if mode in ("train", "prefill"):
+        out = _chunked_attention(q, k, v, scale=scale, causal=True,
+                                 window=cfg.window,
+                                 q_chunk=cfg.attn_q_chunk,
+                                 unroll=cfg.unroll_chunks)
+        if mode == "prefill":
+            cache = _cache_write(cache, k, v, 0, cfg.window)
+    else:  # decode: s == 1, absolute position ``pos``
+        cache = _cache_write(cache, k, v, pos, cfg.window)
+        kc, vc = _cache_read(cache)
+        kc = shard_act(kc, ("batch", "seq_shard", "kv_heads", None))
+        vc = shard_act(vc, ("batch", "seq_shard", "kv_heads", None))
+        slots = kc.shape[1]
+        si = jnp.arange(slots)
+        if cfg.window:
+            valid = (si <= (pos % slots)) | (pos >= slots)
+        else:
+            valid = si <= pos
+        mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+        out = _grouped_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                                 mask, scale)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return linear(params["wo"], out), cache
+
+
+def _mla_attention(params, x, *, cfg, rope, mode, cache, pos):
+    """Multi-head latent attention with compressed KV cache."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    cos_t, sin_t = rope                      # (s, rope_dim/2)
+    qk_dim = m.nope_dim + m.rope_dim
+
+    q = linear(params["q_up"],
+               rms_norm(params["q_norm"], linear(params["q_down"], x)))
+    q = q.reshape(b, s, h, qk_dim)
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+
+    ckv_full = linear(params["kv_down"], x)            # (B,S,kv_lora+rope)
+    c_kv, k_rope = ckv_full[..., :m.kv_lora], ckv_full[..., m.kv_lora:]
+    k_rope = k_rope.reshape(b, s, 1, m.rope_dim)
+
+    q_rope = apply_rotary(q_rope, cos_t, sin_t)
+    k_rope = apply_rotary(k_rope, cos_t, sin_t)
+
+    def expand_kv(c_kv_in, k_rope_in):
+        t = c_kv_in.shape[1]
+        kv = linear(params["kv_up"], rms_norm(params["kv_norm"], c_kv_in))
+        kv = kv.reshape(b, t, h, m.nope_dim + m.v_dim)
+        k_nope, v = kv[..., :m.nope_dim], kv[..., m.nope_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_in.astype(k_nope.dtype),
+                                      (b, t, h, m.rope_dim))], axis=-1)
+        return k, v
+
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = qk_dim ** -0.5
+    if mode in ("train", "prefill"):
+        k, v = expand_kv(c_kv, k_rope)
+        out = _chunked_attention(qfull, k, v, scale=scale, causal=True,
+                                 window=cfg.window,
+                                 q_chunk=cfg.attn_q_chunk,
+                                 unroll=cfg.unroll_chunks)
+        if mode == "prefill":
+            cache = dict(cache)
+            cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, 1)
+            cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, 1)
+    else:
+        cache = dict(cache)
+        cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, 1)
+        cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), pos, 1)
+        ckv_all = shard_act(cache["c_kv"], ("batch", "seq_shard", None))
+        krope_all = cache["k_rope"]
+        t = ckv_all.shape[1]
+        mask = jnp.where(jnp.arange(t) <= pos, 0.0,
+                         NEG_INF)[None, None, None, None, :]
+        if m.absorb:
+            out = _mla_absorbed_decode(params, qfull, ckv_all.astype(x.dtype),
+                                       krope_all.astype(x.dtype), mask,
+                                       scale, m, h)
+        else:
+            k, v = expand_kv(ckv_all.astype(x.dtype),
+                             krope_all.astype(x.dtype))
+            out = _grouped_attention(qfull, k, v, mask, scale)
+    out = out.reshape(b, s, h * m.v_dim)
+    return linear(params["wo"], out), cache
+
+
+def _mla_absorbed_decode(params, qfull, ckv_all, krope_all, mask, scale,
+                         m: MLAConfig, h: int):
+    """Weight-absorbed MLA decode: attend in the compressed kv_lora space.
+
+    scores[h,s] = (W_uk[h]ᵀ q_nope[h]) · n(c_s)  +  q_rope[h] · k_rope_s
+    out[h]      = W_uv[h] @ Σ_s p[h,s] · n(c_s)
+
+    Per step this costs O(H·kv_lora·(nope+v)) for the two absorptions plus
+    O(S·H·kv_lora) for attention — the O(S·H·(nope+v)·kv_lora) cache
+    re-expansion of the naive path is gone.
+    """
+    from repro.models.layers import rms_norm as _rms
+    b, s, _, _ = qfull.shape                       # s == 1 (decode)
+    q_nope = qfull[..., :m.nope_dim]               # (B,1,H,nope)
+    q_rope = qfull[..., m.nope_dim:]               # (B,1,H,rope)
+    w_up = params["kv_up"]["w"]                    # (kv_lora, H*(nope+v))
+    if hasattr(w_up, "dequantize"):
+        w_up = w_up.dequantize(qfull.dtype).T
+    w_up = w_up.reshape(m.kv_lora, h, m.nope_dim + m.v_dim)
+    w_uk = w_up[..., :m.nope_dim]                  # (kv_lora, H, nope)
+    w_uv = w_up[..., m.nope_dim:]                  # (kv_lora, H, v)
+    ckv_n = _rms(params["kv_norm"], ckv_all)       # normalize once per step
+    # absorb K-half into the query: q̃ = W_ukᵀ q_nope → (B,1,H,kv_lora)
+    q_tilde = jnp.einsum("bshn,chn->bshc", q_nope, w_uk.astype(qfull.dtype))
+    s_nope = jnp.einsum("bshc,btc->bhst", q_tilde, ckv_n.astype(qfull.dtype))
+    s_rope = jnp.einsum("bshr,btor->bhst", q_rope,
+                        krope_all.astype(qfull.dtype))
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    scores = scores + mask[:, :, 0]               # (B,H,1,T)
+    p = jax.nn.softmax(scores, axis=-1).astype(qfull.dtype)
+    attended = jnp.einsum("bhst,btc->bshc", p, ckv_n.astype(qfull.dtype))
+    # absorb V-half into the output
+    return jnp.einsum("bshc,chv->bshv", attended, w_uv.astype(qfull.dtype))
+
+
+def init_mla_cache(batch: int, max_len: int, cfg, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, max_len, 1, m.rope_dim), dtype)}
+
+
+def cross_attention(params, x, enc_out, *, cfg,
+                    enc_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Decoder cross-attention over encoder output (full MHA)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    t = enc_out.shape[1]
+    q = linear(params["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = linear(params["wk"], enc_out).reshape(b, t, cfg.n_heads, hd)
+    v = linear(params["wv"], enc_out).reshape(b, t, cfg.n_heads, hd)
+    if enc_mask is not None:
+        mask = jnp.where(enc_mask, 0.0, NEG_INF)[:, None, None, None, :]
+        return linear(params["wo"],
+                      _grouped_attention(q, k, v, mask, hd ** -0.5)
+                      .reshape(b, s, cfg.n_heads * hd))
+    out = _chunked_attention(q, k, v, scale=hd ** -0.5, causal=False,
+                             q_chunk=cfg.attn_q_chunk,
+                             unroll=cfg.unroll_chunks)
+    return linear(params["wo"], out.reshape(b, s, cfg.n_heads * hd))

@@ -1,0 +1,34 @@
+"""Feed-forward variants: SwiGLU (llama-family), GeGLU (gemma), ReLU/GELU."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init_dense, linear
+
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str = "swiglu") -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi": _init_dense(k1, d_model, d_ff),
+                "wg": _init_dense(k2, d_model, d_ff),
+                "wdown": _init_dense(k3, d_ff, d_model)}
+    return {"wi": _init_dense(k1, d_model, d_ff),
+            "wdown": _init_dense(k3, d_ff, d_model)}
+
+
+def ffn(params, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(params["wg"], x)) * linear(params["wi"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(linear(params["wg"], x), approximate=True) * \
+            linear(params["wi"], x)
+    elif kind == "gelu":
+        h = jax.nn.gelu(linear(params["wi"], x), approximate=True)
+    else:  # relu
+        h = jax.nn.relu(linear(params["wi"], x))
+    from repro.distributed.sharding import shard_act
+    h = shard_act(h, ("batch", None, "ff"))
+    return linear(params["wdown"], h)

@@ -1,0 +1,162 @@
+"""Model builder: ArchConfig → init / train_loss / prefill / decode_step.
+
+The returned ``LM`` object is the single interface used by the trainer, the
+serving engine, the quantization pipeline, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act, shard_logits
+from repro.models import transformer as tfm
+from repro.models.layers import init_embedding, rms_norm, init_norm
+from repro.models.transformer import (apply_encoder, apply_stack, init_cache,
+                                      init_encoder, init_stack, rope_values,
+                                      _rope_dim)
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Sharded-vocab-friendly mean cross-entropy (one-hot dot, fp32)."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    oh = jax.nn.one_hot(labels.clip(0), lg.shape[-1], dtype=jnp.float32)
+    ll = jnp.einsum("...v,...v->...", oh, lg)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: Any
+
+    # ----------------------------------------------------------------- init
+    def init(self, key) -> Dict[str, Any]:
+        dt = jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"embedding": init_embedding(k1, self.cfg.vocab,
+                                         self.cfg.d_model, dt),
+             "stack": init_stack(k2, self.cfg),
+             "final_norm": init_norm(self.cfg.d_model,
+                                     plus_one=self.cfg.norm_plus_one)}
+        if not self.cfg.tie_embeddings:
+            p["lm_head"] = {
+                "w": jax.random.normal(
+                    k3, (self.cfg.d_model, self.cfg.vocab), dt) * 0.02}
+        if self.cfg.is_encdec:
+            p["encoder"] = init_encoder(k4, self.cfg)
+        return p
+
+    # ------------------------------------------------------------- forward
+    def _embed(self, params, tokens):
+        x = params["embedding"]["embedding"][tokens]
+        if self.cfg.emb_scale:
+            x = x * jnp.sqrt(float(self.cfg.d_model)).astype(x.dtype)
+        return shard_act(x, ("batch", None, None))
+
+    def _logits(self, params, x):
+        x = rms_norm(params["final_norm"], x, plus_one=self.cfg.norm_plus_one)
+        if self.cfg.tie_embeddings:
+            w = params["embedding"]["embedding"]
+            logits = x @ w.T.astype(x.dtype)
+        else:
+            from repro.models.layers import linear
+            logits = linear(params["lm_head"], x)
+        return shard_logits(logits)
+
+    def _encode(self, params, batch):
+        if not self.cfg.is_encdec:
+            return None
+        return apply_encoder(params["encoder"], batch["enc_frames"],
+                             cfg=self.cfg)
+
+    def forward(self, params, batch, mode: str = "train",
+                caches: Optional[dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        if mode == "decode":
+            pos = caches["pos"]
+            positions = pos[None]
+        else:
+            pos = jnp.zeros((), jnp.int32)
+            positions = jnp.arange(s)
+        rope = rope_values(positions, _rope_dim(self.cfg),
+                           self.cfg.rope_theta)
+        x = self._embed(params, tokens)
+        enc_out = batch.get("enc_out")
+        if enc_out is None:
+            enc_out = self._encode(params, batch)
+        x, new_caches, aux = apply_stack(
+            params["stack"], x, cfg=self.cfg, rope=rope, mode=mode,
+            caches=caches, pos=pos, enc_out=enc_out)
+        if new_caches is not None:
+            new_caches["pos"] = pos + s
+            if enc_out is not None:
+                new_caches["enc_out"] = enc_out
+        logits = self._logits(params, x)
+        return logits, new_caches, aux
+
+    # --------------------------------------------------------------- train
+    def train_loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        logits, _, aux = self.forward(params, batch, mode="train")
+        loss = _xent(logits, batch["labels"])
+        total = loss + 0.01 * aux
+        return total, {"xent": loss, "moe_aux": aux}
+
+    # --------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int,
+                   quantize_kv: bool = False) -> dict:
+        dt = jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+        c = init_cache(self.cfg, batch, max_len, quantize_kv, dt)
+        if self.cfg.is_encdec:
+            enc_len = max(1, max_len // self.cfg.enc_ratio)
+            c["enc_out"] = jnp.zeros((batch, enc_len, self.cfg.d_model), dt)
+        return c
+
+    def prefill(self, params, batch, caches) -> Tuple[jnp.ndarray, dict]:
+        logits, caches, _ = self.forward(params, batch, mode="prefill",
+                                         caches=caches)
+        return logits[:, -1], caches
+
+    def decode_step(self, params, tokens, caches
+                    ) -> Tuple[jnp.ndarray, dict]:
+        """tokens: (B, 1) — one new token per sequence."""
+        batch = {"tokens": tokens, "enc_out": caches.get("enc_out")}
+        logits, caches, _ = self.forward(params, batch, mode="decode",
+                                         caches=caches)
+        return logits[:, -1], caches
+
+    # ---------------------------------------------------------------- specs
+    def input_specs(self, shape) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one step's data inputs."""
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            spec = {"tokens": tok, "labels": tok}
+        elif shape.kind == "prefill":
+            spec = {"tokens": tok}
+        else:  # decode
+            spec = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        if self.cfg.is_encdec and shape.kind != "decode":
+            dt = jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+            spec["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, max(1, s // self.cfg.enc_ratio), self.cfg.d_model), dt)
+        return spec
+
+    def param_shapes(self, key=None) -> Any:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, key)
+
+    def cache_shapes(self, batch: int, max_len: int,
+                     quantize_kv: bool = False) -> Any:
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len, quantize_kv=quantize_kv))
+
+
+def build_model(cfg) -> LM:
+    return LM(cfg=cfg)

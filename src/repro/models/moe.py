@@ -1,0 +1,147 @@
+"""Mixture-of-Experts: GShard/Switch-style top-k routing with capacity.
+
+Dispatch/combine are dense einsums over a (tokens, experts, capacity) one-hot
+tensor — the standard form GSPMD partitions into all-to-alls when experts are
+sharded over the 'model' axis and tokens over 'data'/'pod' (EP).
+
+Expert FFN compute is ``experts × capacity × d × ff`` with
+``capacity = tokens·top_k·capacity_factor / experts`` — i.e. proportional to
+*active* FLOPs (MODEL_FLOPS = 6·N_active·D), not total parameters.
+
+Expert kernels are stacked (experts, in, out) tensors named ``w`` — the
+quantization pipeline treats each expert's matrix independently (per-expert
+per-channel SQuant scales).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.layers import _init_dense
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             kind: str = "swiglu") -> Dict:
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d_model)
+
+    def bank(k, din, dout, scl):
+        return {"w": jax.random.normal(k, (n_experts, din, dout),
+                                       jnp.float32) * scl}
+
+    p = {"router": _init_dense(ks[0], d_model, n_experts, scale=0.02),
+         "wi": bank(ks[1], d_model, d_ff, s),
+         "wdown": bank(ks[3], d_ff, d_model, 1.0 / jnp.sqrt(d_ff))}
+    if kind in ("swiglu", "geglu"):
+        p["wg"] = bank(ks[2], d_model, d_ff, s)
+    return p
+
+
+def _expert_matmul(bank, x):
+    """x: (E, C, din) @ bank (E, din, dout) → (E, C, dout)."""
+    if "w_q" in bank or "w_q4" in bank:              # sharded quant format
+        from repro.quant.apply import dequant_kernel
+        wd = dequant_kernel(bank, x.dtype)           # (E, out, in)
+        return jnp.einsum("ecd,efd->ecf", x, wd)
+    w = bank["w"]
+    if hasattr(w, "dequantize"):                     # QuantizedTensor
+        e = x.shape[0]
+        din = x.shape[-1]
+        # pipeline stores (E*out, in); dequant → (E, out, in) → (E, in, out)
+        wd = w.dequantize(x.dtype).reshape(e, -1, din)
+        return jnp.einsum("ecd,efd->ecf", x, wd)
+    return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+
+
+TOKEN_CHUNK = 8192   # dispatch-tensor bound: (chunk, E, C·chunk/T) per block
+
+
+def moe_ffn(params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+            kind: str = "swiglu", capacity_factor: float = 1.25,
+            dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_loss). x: (B, S, D).
+
+    ``dropless=True`` sets capacity = tokens (no token ever dropped) — used
+    at decode time where capacity competition would make incremental results
+    diverge from teacher forcing. Train/prefill use the GShard capacity.
+
+    Long sequences are processed in TOKEN_CHUNK blocks (scan): the dense
+    (T, E, C) dispatch one-hots are quadratic-ish in T and reached
+    129 GB/device at the 32k-prefill cells (found by the dry-run).
+    Capacity competition becomes per-block — the standard microbatched-MoE
+    behaviour of production serving stacks.
+    """
+    b, s, d = x.shape
+    t = b * s
+    if t > 2 * TOKEN_CHUNK and t % TOKEN_CHUNK == 0 and s % (
+            t // TOKEN_CHUNK) == 0:
+        nblk = t // TOKEN_CHUNK
+        xs = x.reshape(b, nblk, s // nblk, d).swapaxes(0, 1)
+
+        def blk(_, xb):
+            y, aux = moe_ffn(params, xb, n_experts=n_experts, top_k=top_k,
+                             kind=kind, capacity_factor=capacity_factor,
+                             dropless=dropless)
+            return 0, (y, aux)
+
+        _, (ys, auxs) = jax.lax.scan(jax.checkpoint(blk), 0, xs)
+        return ys.swapaxes(0, 1).reshape(b, s, d), jnp.mean(auxs)
+    xt = x.reshape(t, d)
+    from repro.models.layers import linear as _linear
+    logits = _linear(params["router"], xt).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if dropless:
+        capacity = t
+    else:
+        capacity = max(1, int(t * top_k * capacity_factor / n_experts))
+        capacity = min(capacity, t)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # (T,K,E)
+    flatoh = onehot.reshape(t * top_k, n_experts)
+    pos = jnp.cumsum(flatoh, axis=0) * flatoh - 1                  # (T*K, E)
+    pos = pos.reshape(t, top_k, n_experts)
+    within = (pos * onehot).sum(-1)                                # (T, K)
+    expert = gate_idx
+    keep = (within < capacity) & (within >= 0)
+
+    # dispatch (T, E, C) / combine (T, E, C) — accumulated over the K
+    # routing slots to avoid materializing a (T, K, E, C) tensor (a 12 GB
+    # blow-up for moonshot-sized cells; found by the dry-run).
+    disp = jnp.zeros((t, n_experts, capacity), x.dtype)
+    comb = jnp.zeros((t, n_experts, capacity), x.dtype)
+    for kk in range(top_k):
+        oh_e = jax.nn.one_hot(expert[:, kk], n_experts, dtype=x.dtype)
+        oh_c = jax.nn.one_hot(jnp.where(keep[:, kk], within[:, kk],
+                                        capacity), capacity + 1,
+                              dtype=x.dtype)[..., :-1]
+        d_k = oh_e[:, :, None] * oh_c[:, None, :] \
+            * keep[:, kk, None, None].astype(x.dtype)
+        disp = disp + d_k
+        comb = comb + d_k * gate_vals[:, kk, None, None].astype(x.dtype)
+
+    ein = jnp.einsum("tec,td->ecd", disp, xt)                      # (E, C, D)
+    ein = shard_act(ein, ("experts", None, None))
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(_expert_matmul(params["wg"], ein)) * \
+            _expert_matmul(params["wi"], ein)
+    else:
+        h = jax.nn.relu(_expert_matmul(params["wi"], ein))
+    h = shard_act(h, ("experts", None, "expert_ff"))
+    out = _expert_matmul(params["wdown"], h)                       # (E, C, D)
+    y = jnp.einsum("tec,ecd->td", comb, out).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch): E · Σ_e f_e · p_e
+    density = (disp.sum(-1) > 0).astype(jnp.float32).mean(0)       # (E,)
+    mean_prob = probs.mean(0)
+    aux = n_experts * jnp.sum(density * mean_prob)
+    return y, aux

@@ -1,0 +1,3 @@
+"""Quantization substrate: formats, scales, packing, param-tree application."""
+from repro.quant.qtypes import QuantizedTensor, pack_int4, unpack_int4  # noqa: F401
+from repro.quant.scales import compute_scale  # noqa: F401

@@ -1,0 +1,110 @@
+"""Quantized-weights serving format for the *distributed* model.
+
+``QuantizedTensor`` (core pipeline output) is a single-host container; the
+sharded serving path instead stores each kernel as two plain arrays living
+in the params pytree —
+
+    {"w": (in, out) bf16}  →  {"w_q":  (out, in)  int8      [w8]
+                               "w_q4": (out, in/2) int8 packed [w4]
+                               "w_scale": (out, 1) f32}
+
+— so GSPMD shards them like any parameter (transposed kernel rules) and
+``lax.scan`` over stacked layers still works. ``layers.linear`` and
+``moe._expert_matmul`` consume this format directly (dequant-on-the-fly; the
+Pallas dequant_matmul kernel is the TPU fast path).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import is_quantizable
+from repro.core.squant import SQuantConfig, squant_codes
+from repro.quant.qtypes import pack_int4, qmax_for_bits
+from repro.quant.scales import compute_scale
+
+
+def _is_sds(x) -> bool:
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
+def _qdict_shapes(leaf, bits: int):
+    """Shape stand-ins for one quantized kernel (stack dims preserved)."""
+    *stack, d_in, d_out = leaf.shape
+    key = "w_q4" if bits <= 4 else "w_q"
+    qshape = tuple(stack) + ((d_out, d_in // 2) if bits <= 4
+                             else (d_out, d_in))
+    return {key: jax.ShapeDtypeStruct(qshape, jnp.int8),
+            "w_scale": jax.ShapeDtypeStruct(tuple(stack) + (d_out, 1),
+                                            jnp.float32)}
+
+
+def _quantize_leaf(leaf: jnp.ndarray, bits: int, method: str,
+                   group_size: Optional[int]):
+    """Real quantization of one (possibly stacked) (in, out) kernel."""
+    *stack, d_in, d_out = leaf.shape
+    w2d = jnp.moveaxis(leaf.reshape(-1, d_in, d_out), -1, -2) \
+        .reshape(-1, d_in)                       # (stack*out, in)
+    scale = compute_scale(w2d, bits, "max")
+    if method == "rtn":
+        qmax = qmax_for_bits(bits)
+        codes = jnp.clip(jnp.round(w2d / scale), -qmax, qmax)
+    else:
+        codes, _, _ = squant_codes(w2d, scale, bits=bits,
+                                   group_size=group_size, enable_k=True,
+                                   enable_c=True)
+    codes = codes.astype(jnp.int8)
+    if bits <= 4:
+        data = pack_int4(codes).reshape(tuple(stack) + (d_out, d_in // 2))
+        key = "w_q4"
+    else:
+        data = codes.reshape(tuple(stack) + (d_out, d_in))
+        key = "w_q"
+    return {key: data,
+            "w_scale": scale.reshape(tuple(stack) + (d_out, 1))}
+
+
+def _walk(node, path, bits, method, group_size, shapes_only):
+    if isinstance(node, dict):
+        out = {}
+        for k, v in node.items():
+            if (k == "w" and isinstance(v, dict) is False
+                    and hasattr(v, "shape") and len(v.shape) >= 2
+                    and "router" not in path
+                    and "embedding" not in path):
+                if shapes_only or _is_sds(v):
+                    out.update(_qdict_shapes(v, bits))
+                else:
+                    out.update(_quantize_leaf(v, bits, method, group_size))
+            else:
+                out[k] = _walk(v, path + (k,), bits, method, group_size,
+                               shapes_only)
+        return out
+    if isinstance(node, list):
+        return [_walk(v, path + (str(i),), bits, method, group_size,
+                      shapes_only) for i, v in enumerate(node)]
+    return node
+
+
+def quantized_param_shapes(params_shape: Any, bits: int) -> Any:
+    """ShapeDtypeStruct tree for the quantized serving format."""
+    return _walk(params_shape, (), bits, "squant", None, True)
+
+
+def quantize_params_sharded(params: Any, bits: int, method: str = "squant",
+                            group_size: Optional[int] = 128) -> Any:
+    """Real weights → quantized serving tree (data-free, on the fly)."""
+    return _walk(params, (), bits, method, group_size, False)
+
+
+def dequant_kernel(params: dict, dtype) -> jnp.ndarray:
+    """(out, in) float kernel from a quantized param dict."""
+    if "w_q4" in params:
+        from repro.quant.qtypes import unpack_int4
+        codes = unpack_int4(params["w_q4"])
+    else:
+        codes = params["w_q"]
+    return codes.astype(dtype) * params["w_scale"].astype(dtype)

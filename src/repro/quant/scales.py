@@ -1,0 +1,62 @@
+"""Data-free quantization scale selection.
+
+Per the paper (Sec. 4), SQuant uses per-channel symmetric weight scales; the
+range can come from the channel max ("max") or an MSE-optimal clip search
+("mse") — both are data-free (they look only at the weights).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.quant.qtypes import qmax_for_bits
+
+_EPS = 1e-12
+
+
+def _absmax(w2d: jnp.ndarray) -> jnp.ndarray:
+    return jnp.max(jnp.abs(w2d), axis=-1, keepdims=True)
+
+
+def max_scale(w2d: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-row symmetric max scale. w2d: (M, N) → (M, 1)."""
+    return jnp.maximum(_absmax(w2d), _EPS) / qmax_for_bits(bits)
+
+
+def mse_scale(w2d: jnp.ndarray, bits: int, num_candidates: int = 40,
+              lo: float = 0.4) -> jnp.ndarray:
+    """Per-row scale minimizing rounding MSE over a clip-ratio grid.
+
+    Data-free: the search objective is the weight-space MSE of
+    clip(round(w/s)) * s, evaluated per row over ``num_candidates`` clip
+    ratios in [lo, 1.0].
+    """
+    qmax = qmax_for_bits(bits)
+    base = jnp.maximum(_absmax(w2d), _EPS)        # (M, 1)
+    ratios = jnp.linspace(lo, 1.0, num_candidates)  # (R,)
+    scales = base[None] * ratios[:, None, None] / qmax  # (R, M, 1)
+    q = jnp.clip(jnp.round(w2d[None] / scales), -qmax, qmax)
+    err = jnp.sum((q * scales - w2d[None]) ** 2, axis=-1)  # (R, M)
+    best = jnp.argmin(err, axis=0)                          # (M,)
+    return jnp.take_along_axis(
+        scales[:, :, 0].T, best[:, None], axis=1)           # (M, 1)
+
+
+def compute_scale(w2d: jnp.ndarray, bits: int, method: str = "max",
+                  group_size: Optional[int] = None) -> jnp.ndarray:
+    """Scale for a (M, N) matrix.
+
+    group_size=None → per-channel (M, 1)  [SQuant's setting]
+    group_size=G    → per-group (M, N//G) [serving-format option; not used by
+                      the SQuant CASE math, which requires a uniform scale per
+                      channel — see DESIGN.md §2]
+    """
+    fn = {"max": max_scale, "mse": mse_scale}[method]
+    if group_size is None:
+        return fn(w2d, bits)
+    m, n = w2d.shape
+    if n % group_size != 0:
+        raise ValueError(f"N={n} not divisible by group_size={group_size}")
+    wg = w2d.reshape(m * (n // group_size), group_size)
+    return fn(wg, bits).reshape(m, n // group_size)

@@ -1,0 +1,3 @@
+"""Runtime services: straggler monitoring, elastic re-meshing."""
+from repro.runtime.monitor import StepMonitor  # noqa: F401
+from repro.runtime.elastic import choose_mesh_shape  # noqa: F401

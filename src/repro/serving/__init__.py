@@ -1,0 +1,2 @@
+"""Batched serving engine with quantized-weight and quantized-KV paths."""
+from repro.serving.engine import ServeEngine, ServeConfig  # noqa: F401

@@ -1,0 +1,143 @@
+"""Batched serving engine.
+
+The request path SQuant enables: load fp weights → on-the-fly data-free
+quantization (sub-second, no data, no BP — the paper's "on-the-fly
+framework") → serve int8/int4 weights with dequant-on-the-fly matmuls and
+optionally int8 KV caches.
+
+Batching model: static continuous batch of ``max_batch`` slots. Requests are
+left-padded to a common prefill length per micro-round (simple and fully
+jittable); decode proceeds in lockstep with per-slot completion masks. Slots
+are refilled between rounds (tests exercise multi-round refills).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import quantize_tree
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    quantize_weights: Optional[str] = None    # None|'rtn'|'squant'|...
+    weight_bits: int = 8
+    quantize_kv: bool = False
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: int = -1                          # -1: never stop early
+    pad_id: int = 0
+    dequantize_for_compute: bool = True       # fake-quant serve on CPU
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    request_id: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: List[int]
+    prefill_ms: float
+    decode_ms: float
+
+
+class ServeEngine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.cfg = cfg
+        self.quant_report = None
+        if cfg.quantize_weights and not cfg.dequantize_for_compute:
+            # real-quantized serving: QuantizedTensor leaves can't be scanned
+            # over — unroll the layer stack (standard for serving anyway).
+            import dataclasses as _dc
+            from repro.models.model import build_model
+            from repro.models.transformer import n_periods, unstack_stack
+            if "periods" in params.get("stack", {}):
+                params = dict(params)
+                params["stack"] = unstack_stack(params["stack"],
+                                                n_periods(model.cfg))
+            model = build_model(_dc.replace(model.cfg, scan_layers=False))
+        self.model = model
+        if cfg.quantize_weights:
+            params, self.quant_report = quantize_tree(
+                params, method=cfg.quantize_weights, bits=cfg.weight_bits,
+                dequantize=cfg.dequantize_for_compute)
+        self.params = params
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self._key = jax.random.PRNGKey(0)
+
+    # ------------------------------------------------------------------ api
+    def generate(self, requests: Sequence[Request]) -> List[Completion]:
+        out: List[Completion] = []
+        reqs = list(requests)
+        while reqs:
+            round_reqs = reqs[:self.cfg.max_batch]
+            reqs = reqs[self.cfg.max_batch:]
+            out.extend(self._run_round(round_reqs))
+        return out
+
+    # ---------------------------------------------------------------- round
+    def _run_round(self, reqs: List[Request]) -> List[Completion]:
+        b = len(reqs)
+        pad_b = self.cfg.max_batch
+        plen = max(len(r.prompt) for r in reqs)
+        tokens = np.full((pad_b, plen), self.cfg.pad_id, np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, plen - len(r.prompt):] = np.asarray(r.prompt)
+
+        cache = self.model.init_cache(pad_b, self.cfg.max_len,
+                                      quantize_kv=self.cfg.quantize_kv)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.model.cfg.is_encdec:
+            batch["enc_frames"] = jnp.zeros(
+                (pad_b, max(1, plen // self.model.cfg.enc_ratio),
+                 self.model.cfg.d_model), jnp.float32)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch, cache)
+        jax.block_until_ready(logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        produced = np.full((pad_b, max_new), self.cfg.pad_id, np.int32)
+        done = np.zeros(pad_b, bool)
+        t0 = time.perf_counter()
+        cur = None
+        for t in range(max_new):
+            self._key, sk = jax.random.split(self._key)
+            nxt = sample(logits, sk, self.cfg.temperature, self.cfg.top_k)
+            nxt_np = np.asarray(nxt)
+            for i, r in enumerate(reqs):
+                if not done[i] and t < r.max_new_tokens:
+                    produced[i, t] = nxt_np[i]
+                    if nxt_np[i] == self.cfg.eos_id:
+                        done[i] = True
+                else:
+                    done[i] = done[i] or t >= r.max_new_tokens
+            if all(done[i] for i in range(b)):
+                break
+            cur = nxt[:, None]
+            logits, cache = self._decode(self.params, cur, cache)
+        jax.block_until_ready(logits)
+        decode_ms = (time.perf_counter() - t0) * 1e3
+
+        outs = []
+        for i, r in enumerate(reqs):
+            toks = [int(x) for x in produced[i, :r.max_new_tokens]]
+            # truncate at EOS
+            if self.cfg.eos_id >= 0 and self.cfg.eos_id in toks:
+                toks = toks[:toks.index(self.cfg.eos_id) + 1]
+            outs.append(Completion(r.request_id, toks, prefill_ms,
+                                   decode_ms))
+        return outs

@@ -1,0 +1,18 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits: (B, V) → (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(lg, top_k)
+        kth = vals[:, -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,139 @@
+"""Cross-pod gradient compression: int8 ring all-reduce with error feedback.
+
+Why: at multi-pod scale the pod-to-pod links are the thin resource. A plain
+DP all-reduce ships f32 (or bf16) gradients across pods every step. Here the
+cross-pod leg is replaced by a manual ring all-reduce (reduce-scatter +
+all-gather via ``lax.ppermute``) whose wire payload is **int8 codes + one f32
+scale per block** — ≈4× fewer cross-pod bytes — while the in-pod reduction
+stays in full precision via GSPMD. The quantization residual is carried in an
+error-feedback buffer (added back before the next step's compression), which
+keeps SGD convergence intact (Karimireddy et al., 2019).
+
+Mechanics: the train step is ``shard_map``-ed over the 'pod' axis only, with
+'data'/'model' left as *auto* axes (GSPMD partitions the pod-local step as
+usual). Inside, each pod holds pod-local mean gradients; ``ring_allreduce_i8``
+sums them across pods in R-1 ppermute hops of int8 payloads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 2048  # error-feedback / scale block size (f32 overhead: 1/2048)
+
+
+def _quant_block(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (nblocks, BLOCK) f32 → (codes int8, scale f32 (nblocks, 1))."""
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    return jnp.round(x / scale).astype(jnp.int8), scale
+
+
+def _flatten_pad(tree: Any) -> Tuple[jnp.ndarray, Any, int]:
+    leaves, tdef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, (tdef, [l.shape for l in leaves],
+                  [l.dtype for l in leaves], n), pad
+
+
+def _unflatten(flat: jnp.ndarray, meta) -> Any:
+    tdef, shapes, dtypes, n = meta
+    flat = flat[:n]
+    out = []
+    off = 0
+    for shp, dt in zip(shapes, dtypes):
+        sz = 1
+        for s in shp:
+            sz *= s
+        out.append(flat[off:off + sz].reshape(shp).astype(dt))
+        off += sz
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def ring_allreduce_i8(flat: jnp.ndarray, axis: str, axis_size: int
+                      ) -> jnp.ndarray:
+    """Sum ``flat`` (per-shard f32 vector, length divisible by
+    axis_size*BLOCK) across ``axis`` with int8 wire payloads.
+
+    Ring reduce-scatter (R-1 hops) + ring all-gather (R-1 hops); every hop
+    re-quantizes its chunk (int8 + per-block f32 scales).
+    """
+    r = axis_size
+    idx = jax.lax.axis_index(axis)
+    chunks = flat.reshape(r, -1)                       # (R, C)
+    perm = [(i, (i + 1) % r) for i in range(r)]
+
+    def quant_chunk(c):
+        codes, scale = _quant_block(c.reshape(-1, BLOCK))
+        return codes, scale
+
+    def dequant(codes, scale):
+        return (codes.astype(jnp.float32).reshape(-1, BLOCK)
+                * scale).reshape(-1)
+
+    # ---- reduce-scatter: after R-1 hops, shard i holds the sum of chunk i
+    acc = chunks
+    for hop in range(r - 1):
+        send_idx = (idx - hop) % r                # chunk being forwarded
+        send = jnp.squeeze(
+            jax.lax.dynamic_slice_in_dim(acc, send_idx, 1, 0), 0)
+        codes, scale = quant_chunk(send)
+        codes = jax.lax.ppermute(codes, axis, perm)
+        scale = jax.lax.ppermute(scale, axis, perm)
+        recv = dequant(codes, scale)
+        recv_idx = (idx - hop - 1) % r
+        upd = jnp.squeeze(
+            jax.lax.dynamic_slice_in_dim(acc, recv_idx, 1, 0), 0) + recv
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, upd[None], recv_idx, 0)
+
+    # ---- all-gather: quantize each reduced chunk ONCE and circulate the
+    # codes verbatim so every shard reconstructs bit-identical values
+    # (including the owner, which uses its own quantized image).
+    own_idx = (idx + 1) % r
+    own = jnp.squeeze(jax.lax.dynamic_slice_in_dim(acc, own_idx, 1, 0), 0)
+    codes, scale = quant_chunk(own)
+    out = jnp.zeros_like(chunks)
+    out = jax.lax.dynamic_update_slice_in_dim(
+        out, dequant(codes, scale)[None], own_idx, 0)
+    cur_idx = own_idx
+    for hop in range(r - 1):
+        codes = jax.lax.ppermute(codes, axis, perm)
+        scale = jax.lax.ppermute(scale, axis, perm)
+        cur_idx = (cur_idx - 1) % r
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, dequant(codes, scale)[None], cur_idx, 0)
+    return out.reshape(-1)
+
+
+def compress_allreduce_grads(grads: Any, error: Any, axis: str,
+                             axis_size: int) -> Tuple[Any, Any]:
+    """int8 ring all-reduce of a gradient pytree across ``axis`` with error
+    feedback. Returns (mean_grads, new_error). Call inside shard_map."""
+    flat, meta, _ = _flatten_pad(grads)
+    eflat, _, _ = _flatten_pad(error)
+    flat = flat + eflat
+    # pad so chunks divide evenly across the ring
+    n = flat.shape[0]
+    pad = (-n) % (axis_size * BLOCK)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    reduced = ring_allreduce_i8(flat, axis, axis_size) / axis_size
+    # error feedback: what compression lost this step, replayed next step.
+    # approximate: difference between the local contribution and its
+    # quantized image is captured per-hop; we track the end-to-end residual
+    # of our own shard's chunk (cheap, effective in practice).
+    codes, scale = _quant_block(flat.reshape(-1, BLOCK))
+    deq = (codes.astype(jnp.float32) * scale).reshape(-1)
+    new_err_flat = (flat - deq)[:n]
+    if pad:
+        reduced = reduced[:n]
+    return _unflatten(reduced, meta), _unflatten(new_err_flat, meta)

@@ -1,0 +1,21 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches must
+see the single real CPU device. Multi-device tests spawn subprocesses that
+set the flag themselves (see tests/test_sharding.py, tests/test_dryrun_small.py).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def grid_weights(rng, m, n, step=1.0 / 64.0, span=400):
+    """Weights on an exact binary grid: float32 sums are exact, so the
+    vectorized JAX implementation and the float64 NumPy reference make
+    identical flip decisions (no accumulation-order ambiguity)."""
+    ints = rng.integers(-span, span + 1, size=(m, n))
+    return (ints * step).astype(np.float32)

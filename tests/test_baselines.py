@@ -1,0 +1,104 @@
+"""Tests for the data-free baselines (RTN / DFQ equalization / bias
+correction / ZeroQ-style synthesis / AdaRound)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.quant.scales import compute_scale, mse_scale
+
+
+def test_rtn_matches_manual(rng):
+    w = rng.normal(size=(8, 64)).astype(np.float32)
+    qt = baselines.rtn(jnp.asarray(w), bits=4)
+    s = np.asarray(qt.scale)
+    np.testing.assert_array_equal(np.asarray(qt.codes()),
+                                  np.clip(np.round(w / s), -7, 7))
+
+
+def test_mse_scale_beats_max_scale_on_outliers(rng):
+    w = rng.normal(size=(16, 512)).astype(np.float32)
+    w[:, 0] *= 30.0  # outlier per row
+    wj = jnp.asarray(w)
+    for bits in (3, 4):
+        s_max = compute_scale(wj, bits, "max")
+        s_mse = compute_scale(wj, bits, "mse")
+        qmax = 2 ** (bits - 1) - 1
+
+        def err(s):
+            q = jnp.clip(jnp.round(wj / s), -qmax, qmax)
+            return float(jnp.mean((q * s - wj) ** 2))
+
+        assert err(s_mse) < err(s_max)
+
+
+def test_equalization_preserves_function(rng):
+    """ReLU positive homogeneity: W2·relu(W1 x) invariant under equalization."""
+    w1 = rng.normal(size=(32, 16)).astype(np.float32)
+    w2 = rng.normal(size=(8, 32)).astype(np.float32)
+    x = rng.normal(size=(64, 16)).astype(np.float32)
+    e1, e2, s = baselines.equalize_pair(jnp.asarray(w1), jnp.asarray(w2))
+    y0 = w2 @ np.maximum(w1 @ x.T, 0)
+    y1 = np.asarray(e2) @ np.maximum(np.asarray(e1) @ x.T, 0)
+    np.testing.assert_allclose(y1, y0, rtol=1e-4, atol=1e-4)
+    # ranges actually equalized
+    r1 = np.abs(np.asarray(e1)).max(1)
+    r2 = np.abs(np.asarray(e2)).max(0)
+    np.testing.assert_allclose(r1, r2, rtol=1e-3)
+
+
+def test_equalization_reduces_rtn_error(rng):
+    """Pathological per-channel ranges: equalization + per-tensor RTN beats
+    plain per-tensor RTN (the regime DFQ equalization is designed for)."""
+    w1 = rng.normal(size=(32, 16)).astype(np.float32)
+    w1 *= np.logspace(-2, 1, 32)[:, None].astype(np.float32)  # wild ranges
+    w2 = rng.normal(size=(8, 32)).astype(np.float32)
+    x = rng.normal(size=(128, 16)).astype(np.float32)
+    y_ref = np.maximum(w1 @ x.T, 0).T @ w2.T
+
+    def pt(a):
+        s = float(np.abs(a).max() / 7.0)
+        return np.clip(np.round(a / s), -7, 7) * s
+
+    def quant_err(a, b):
+        y = np.maximum(pt(a) @ x.T, 0).T @ pt(b).T
+        return float(np.mean((y - y_ref) ** 2))
+
+    e1, e2, _ = baselines.equalize_pair(jnp.asarray(w1), jnp.asarray(w2))
+    assert quant_err(np.asarray(e1), np.asarray(e2)) < quant_err(w1, w2)
+
+
+def test_bias_correction_zeroes_expected_shift(rng):
+    w = rng.normal(size=(8, 32)).astype(np.float32)
+    wq = np.asarray(baselines.rtn(jnp.asarray(w), bits=3).dequantize())
+    mu = rng.normal(size=32).astype(np.float32)
+    corr = np.asarray(baselines.bias_correction(
+        jnp.asarray(w), jnp.asarray(wq), jnp.asarray(mu)))
+    shift = (wq - w) @ mu + corr
+    np.testing.assert_allclose(shift, 0.0, atol=1e-5)
+
+
+def test_synthesize_inputs_matches_stats(rng):
+    key = jax.random.PRNGKey(0)
+    target = jnp.asarray([0.0, 1.0])
+
+    def stat_fn(x):
+        return jnp.stack([jnp.mean(x), jnp.var(x)])
+
+    x = baselines.synthesize_inputs(stat_fn, target, (32, 16), key, iters=200)
+    s = np.asarray(stat_fn(x))
+    assert abs(s[0]) < 0.05 and abs(s[1] - 1.0) < 0.1
+
+
+@pytest.mark.slow
+def test_adaround_beats_rtn_on_output_mse(rng):
+    w = rng.normal(size=(16, 64)).astype(np.float32)
+    x = rng.normal(size=(128, 64)).astype(np.float32)
+    y_ref = x @ w.T
+    q_rtn = np.asarray(baselines.rtn(jnp.asarray(w), bits=3).dequantize())
+    q_ada = np.asarray(baselines.adaround(
+        jnp.asarray(w), jnp.asarray(x), bits=3, iters=150).dequantize())
+    err_rtn = np.mean((x @ q_rtn.T - y_ref) ** 2)
+    err_ada = np.mean((x @ q_ada.T - y_ref) ** 2)
+    assert err_ada < err_rtn

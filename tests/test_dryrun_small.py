@@ -1,0 +1,63 @@
+"""CI-scale dry-run: the full launch path (mesh, shardings, lower, compile,
+memory/cost/collective analysis) on an 8-device debug mesh in a subprocess.
+The 256/512-chip production runs use the same code (see artifacts/dryrun)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mesh", ["pod", "multipod"])
+def test_dryrun_debug_mesh(mesh):
+    with tempfile.TemporaryDirectory() as tmp:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env["REPRO_DRYRUN_DEVICES"] = "8"
+        env["REPRO_DRYRUN_DEBUG_MESH"] = "1"
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "seamless-m4t-medium", "--shape", "decode_32k",
+             "--mesh", mesh, "--out", tmp],
+            capture_output=True, text=True, env=env, timeout=1200)
+        assert out.returncode == 0, out.stderr[-3000:]
+        art = os.path.join(
+            tmp, f"seamless-m4t-medium__decode_32k__{mesh}.json")
+        with open(art) as f:
+            d = json.load(f)
+        assert d["status"] == "ok", d
+        assert d["hlo_flops"] > 0
+        assert d["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                             "collective_s")
+        assert d["collectives"]["total"] >= 0
+
+
+@pytest.mark.slow
+def test_dryrun_costing_debug():
+    with tempfile.TemporaryDirectory() as tmp:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env["REPRO_DRYRUN_DEVICES"] = "8"
+        env["REPRO_DRYRUN_DEBUG_MESH"] = "1"
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "seamless-m4t-medium", "--shape", "decode_32k",
+             "--mesh", "pod", "--costing", "--out", tmp],
+            capture_output=True, text=True, env=env, timeout=1200)
+        assert out.returncode == 0, out.stderr[-3000:]
+        art = os.path.join(
+            tmp, "seamless-m4t-medium__decode_32k__pod__cost.json")
+        with open(art) as f:
+            d = json.load(f)
+        assert d["status"] == "ok", d
+        # extrapolated full depth, useful-flops ratio sane
+        assert d["extrapolated_periods"] == 12
+        ratio = d["roofline"]["model_flops_ratio"]
+        # enc-dec decode recomputes cross-attention K/V per step, so the
+        # useful-flops ratio is legitimately small; just sanity-bound it
+        assert ratio is not None and 0.0001 < ratio <= 2.0, ratio

@@ -1,0 +1,173 @@
+"""Unit tests for the vectorized SQuant core: invariants, oracle agreement
+with the sequential NumPy reference (Algorithms 1-4), and MSE ordering."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.reference import squant_reference
+from repro.core.squant import SQuantConfig, squant, squant_codes
+from repro.quant.qtypes import qmax_for_bits
+from repro.quant.scales import compute_scale
+
+from conftest import grid_weights
+
+
+def _delta(codes, w, scale):
+    return np.asarray(codes, np.float64) - np.asarray(w, np.float64) / \
+        np.asarray(scale, np.float64).reshape(w.shape[0], 1)
+
+
+# ---------------------------------------------------------------------------
+# Invariants (Eq. 9-12)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [3, 4, 6, 8])
+@pytest.mark.parametrize("gs", [None, 32, 128])
+def test_full_squant_invariants(rng, bits, gs):
+    w = rng.normal(size=(24, 256)).astype(np.float32)
+    cfg = SQuantConfig(bits=bits, group_size=gs)
+    qt, stats = squant(jnp.asarray(w), cfg)
+    codes = np.asarray(qt.codes(), np.float64)
+    d = _delta(codes, w, qt.scale)
+    tol = 1e-4
+    # r_e relaxed to 1.0: every element within one grid step
+    assert np.abs(d).max() < 1.0 + tol
+    # r_c = 0.5: channel ASE bounded
+    assert np.abs(d.sum(axis=1)).max() <= 0.5 + tol
+    if gs is not None and gs < 256:
+        # r_k relaxed to 1.0 after SQuant-C
+        gsum = d.reshape(24, -1, gs).sum(axis=-1)
+        assert np.abs(gsum).max() <= 1.0 + tol
+    # codes on the symmetric grid
+    assert codes.max() <= qmax_for_bits(bits)
+    assert codes.min() >= -qmax_for_bits(bits)
+
+
+def test_ek_only_invariants(rng):
+    w = rng.normal(size=(8, 256)).astype(np.float32)
+    cfg = SQuantConfig(bits=4, group_size=32, enable_c=False)
+    qt, _ = squant(jnp.asarray(w), cfg)
+    d = _delta(np.asarray(qt.codes()), w, qt.scale)
+    gsum = d.reshape(8, -1, 32).sum(axis=-1)
+    assert np.abs(gsum).max() <= 0.5 + 1e-4      # r_k = 0.5 before C
+    assert np.abs(d).max() < 1.0 + 1e-4
+
+
+def test_e_only_is_rounding(rng):
+    w = rng.normal(size=(8, 64)).astype(np.float32)
+    cfg = SQuantConfig(bits=4, group_size=16, enable_k=False, enable_c=False)
+    qt, _ = squant(jnp.asarray(w), cfg)
+    scale = np.asarray(qt.scale)
+    expect = np.clip(np.round(w / scale), -7, 7)
+    np.testing.assert_array_equal(np.asarray(qt.codes()), expect)
+
+
+def test_flip_counts_match_case(rng):
+    """k = ⌊|Σδ|⌉ flips per group (Algorithm 2 line 4)."""
+    w = grid_weights(rng, 16, 256)
+    scale = np.ones((16, 1), np.float32)
+    codes, delta, stats = squant_codes(
+        jnp.asarray(w), jnp.asarray(scale), bits=8, group_size=32,
+        enable_k=True, enable_c=False)
+    d0 = np.round(w) - w
+    expected = int(np.abs(d0.reshape(16, -1, 32).sum(-1)).round().sum())
+    assert int(stats["flips_k"]) == expected
+
+
+# ---------------------------------------------------------------------------
+# Oracle agreement: vectorized JAX == sequential NumPy (Algorithms 1-4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gs,ek,ec", [
+    (None, False, True),   # paper FC path: E then C
+    (32, True, False),     # E&K
+    (32, True, True),      # full E&K&C
+    (64, True, True),
+    (32, False, True),     # E&C ablation
+])
+def test_matches_sequential_reference(rng, gs, ek, ec):
+    w = grid_weights(rng, 12, 128)
+    scale = np.ones((12, 1), np.float32) * 0.25    # grid-exact ratio
+    ref_codes, ref_delta, _ = squant_reference(
+        w, scale, bits=8, group_size=gs, enable_k=ek, enable_c=ec)
+    codes, delta, _ = squant_codes(
+        jnp.asarray(w), jnp.asarray(scale), bits=8, group_size=gs,
+        enable_k=ek, enable_c=ec)
+    np.testing.assert_array_equal(np.asarray(codes), ref_codes)
+
+
+def test_matches_reference_conv_layout(rng):
+    """(M, N, K) conv weights: kernels are the trailing dim."""
+    w = grid_weights(rng, 6, 16 * 9).reshape(6, 16, 9)
+    scale = np.ones((6, 1), np.float32) * 0.5
+    ref_codes, _, _ = squant_reference(
+        w.reshape(6, -1), scale, bits=8, group_size=9)
+    qt, _ = squant(jnp.asarray(w), SQuantConfig(bits=8, group_size=None),
+                   scale=jnp.asarray(scale))
+    np.testing.assert_array_equal(
+        np.asarray(qt.codes()).reshape(6, -1), ref_codes)
+
+
+# ---------------------------------------------------------------------------
+# Objective quality: CASE ordering E >= E&K >= E&K&C on the data-free metric
+# ---------------------------------------------------------------------------
+
+def test_case_ordering(rng):
+    w = rng.normal(size=(32, 512)).astype(np.float32)
+    scale = compute_scale(jnp.asarray(w), 4, "max")
+
+    def row_case(codes):
+        d = _delta(np.asarray(codes), w, scale)
+        return np.abs(d.sum(1)).mean()
+
+    results = {}
+    for tag, (ek, ec) in {"e": (False, False), "ek": (True, False),
+                          "ekc": (True, True)}.items():
+        codes, _, _ = squant_codes(jnp.asarray(w), scale, bits=4,
+                                   group_size=64, enable_k=ek, enable_c=ec)
+        results[tag] = row_case(codes)
+    assert results["ekc"] <= results["ek"] + 1e-6
+    assert results["ekc"] <= results["e"] + 1e-6
+    assert results["ek"] <= results["e"] + 1e-6
+
+
+def test_mse_penalty_is_small(rng):
+    """Flips trade a little element MSE for CASE; the MSE increase over pure
+    rounding must stay tiny (each flip costs at most (1-|δ|)² - δ² < 1)."""
+    w = rng.normal(size=(32, 512)).astype(np.float32)
+    cfg_e = SQuantConfig(bits=4, group_size=64, enable_k=False, enable_c=False)
+    cfg_f = SQuantConfig(bits=4, group_size=64)
+    qe, _ = squant(jnp.asarray(w), cfg_e)
+    qf, _ = squant(jnp.asarray(w), cfg_f)
+    mse_e = float(np.mean((np.asarray(qe.dequantize()) - w) ** 2))
+    mse_f = float(np.mean((np.asarray(qf.dequantize()) - w) ** 2))
+    assert mse_f < mse_e * 1.35
+
+
+def test_pathological_all_half(rng):
+    """Worst case from Appendix B.1: every δ = ±0.5."""
+    w = np.full((4, 64), 0.5, np.float32)
+    scale = np.ones((4, 1), np.float32)
+    codes, delta, _ = squant_codes(jnp.asarray(w), jnp.asarray(scale),
+                                   bits=8, group_size=16, enable_k=True,
+                                   enable_c=True)
+    d = np.asarray(delta)
+    assert np.abs(d.sum(1)).max() <= 0.5 + 1e-5
+    assert np.abs(d).max() <= 1.0
+
+
+def test_zero_and_tiny_rows():
+    w = np.zeros((4, 64), np.float32)
+    w[1, 0] = 1e-30
+    qt, _ = squant(jnp.asarray(w), SQuantConfig(bits=4, group_size=16))
+    assert np.all(np.isfinite(np.asarray(qt.dequantize())))
+
+
+def test_boundary_clipping_respected(rng):
+    """With an aggressive (clipping) scale, flips must stay on the grid."""
+    w = rng.normal(size=(16, 128)).astype(np.float32) * 4
+    scale = np.full((16, 1), 0.5, np.float32)   # clips heavily at 4-bit
+    codes, _, _ = squant_codes(jnp.asarray(w), jnp.asarray(scale), bits=4,
+                               group_size=32, enable_k=True, enable_c=True)
+    c = np.asarray(codes)
+    assert c.max() <= 7 and c.min() >= -7

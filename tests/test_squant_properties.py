@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) on SQuant's discrete-domain invariants.
+
+These are the paper's Eq. (9)-(12) constraints plus structural properties of
+the flipping procedure, checked over randomized shapes / bit-widths / scales.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.squant import SQuantConfig, squant, squant_codes
+from repro.quant.qtypes import pack_int4, unpack_int4, qmax_for_bits
+
+TOL = 1e-3
+
+
+@st.composite
+def weight_case(draw):
+    m = draw(st.integers(1, 12))
+    ng = draw(st.integers(1, 6))
+    g = draw(st.sampled_from([4, 8, 16, 32]))
+    bits = draw(st.sampled_from([3, 4, 6, 8]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale_mult = draw(st.sampled_from([0.5, 1.0, 2.0]))
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, ng * g)).astype(np.float32) * scale_mult
+    return w, g, bits
+
+
+@settings(max_examples=60, deadline=None)
+@given(weight_case())
+def test_invariants_random(case):
+    w, g, bits = case
+    m, n = w.shape
+    qt, _ = squant(jnp.asarray(w), SQuantConfig(bits=bits, group_size=g))
+    codes = np.asarray(qt.codes(), np.float64)
+    d = codes - w / np.asarray(qt.scale)
+    qmax = qmax_for_bits(bits)
+    assert codes.max() <= qmax and codes.min() >= -qmax
+    assert np.abs(d).max() < 1.0 + TOL                       # r_e relaxed
+    assert np.abs(d.sum(1)).max() <= 0.5 + TOL               # r_c
+    if g < n:
+        assert np.abs(d.reshape(m, -1, g).sum(-1)).max() <= 1.0 + TOL  # r_k
+
+
+@settings(max_examples=40, deadline=None)
+@given(weight_case())
+def test_flip_is_pm1_mutation(case):
+    """Every SQuant output code differs from plain rounding by at most ±1,
+    i.e. flips are single-step mutations (Sec. 3.3)."""
+    w, g, bits = case
+    scale = jnp.asarray(np.maximum(np.abs(w).max(1, keepdims=True), 1e-9)
+                        / qmax_for_bits(bits))
+    qmax = qmax_for_bits(bits)
+    rounded = np.clip(np.round(w / np.asarray(scale)), -qmax, qmax)
+    codes, _, _ = squant_codes(jnp.asarray(w), scale, bits=bits, group_size=g,
+                               enable_k=True, enable_c=True)
+    diff = np.abs(np.asarray(codes, np.float64) - rounded)
+    assert diff.max() <= 1.0 + 1e-6
+    # C stage flips at most one element per group beyond the K flips; total
+    # mutated fraction is bounded by (0.5 per group + 1 per group) / g.
+    assert (diff > 0).mean() <= (0.5 * g + 1.0) / g + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(weight_case())
+def test_determinism(case):
+    w, g, bits = case
+    cfg = SQuantConfig(bits=bits, group_size=g)
+    a, _ = squant(jnp.asarray(w), cfg)
+    b, _ = squant(jnp.asarray(w), cfg)
+    np.testing.assert_array_equal(np.asarray(a.codes()), np.asarray(b.codes()))
+
+
+@settings(max_examples=40, deadline=None)
+@given(weight_case())
+def test_scale_equivariance(case):
+    """squant(c·W) with scale c·s gives identical codes (grid equivariance)."""
+    w, g, bits = case
+    scale = jnp.asarray(np.maximum(np.abs(w).max(1, keepdims=True), 1e-9)
+                        / qmax_for_bits(bits))
+    c1, _, _ = squant_codes(jnp.asarray(w), scale, bits=bits, group_size=g,
+                            enable_k=True, enable_c=True)
+    c2, _, _ = squant_codes(jnp.asarray(w * 4.0), scale * 4.0, bits=bits,
+                            group_size=g, enable_k=True, enable_c=True)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 64))
+def test_int4_pack_roundtrip(seed, m, half_n):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, size=(m, 2 * half_n)).astype(np.int8)
+    packed = pack_int4(jnp.asarray(codes))
+    assert packed.shape == (m, half_n)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)), codes)
+
+
+@settings(max_examples=30, deadline=None)
+@given(weight_case())
+def test_dequantize_error_bound(case):
+    """|dequant − w| ≤ scale per element (r_e ≤ 1.0 in real units), for
+    non-clipped rows (max-scale never clips)."""
+    w, g, bits = case
+    qt, _ = squant(jnp.asarray(w), SQuantConfig(bits=bits, group_size=g))
+    err = np.abs(np.asarray(qt.dequantize()) - w)
+    bound = np.asarray(qt.scale) * (1.0 + TOL)
+    assert np.all(err <= bound + 1e-6)
