@@ -4,10 +4,14 @@ The paper's headline systems claim: SQuant quantizes whole networks in
 milliseconds (no data, no BP) while generative DFQ takes minutes-hours.
 Here: SQuant vs data-free AdaRound (ZeroQ-style synthesis + gradient
 rounding) on the toy CNN, plus per-layer SQuant timing on mid-size LM
-weight matrices (up to granite-3-8b-sized layers).
+weight matrices (up to granite-3-8b-sized layers), plus the serial
+(per-layer sync) vs batched (bucketed, one sync) pipeline comparison —
+run as a script it writes the batched-pipeline numbers to
+``BENCH_pipeline.json``.
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict
 
@@ -17,9 +21,68 @@ import numpy as np
 
 from repro.core.pipeline import quantize_tree
 from repro.core.squant import SQuantConfig, squant
+from repro.quant.qtypes import QuantizedTensor
 
 from _toy import train_cnn
 from bench_accuracy import quantize_cnn
+
+
+def _tree_codes(tree):
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    return [np.asarray(l.codes()) for l in leaves
+            if isinstance(l, QuantizedTensor)]
+
+
+def bench_pipeline(report=print) -> Dict:
+    """Serial per-layer loop vs the batched bucketed pipeline (ISSUE 1).
+
+    Toy CNN + one reduced LM; asserts both paths emit identical int8 codes.
+    Returns a ``BENCH_pipeline.json``-compatible dict.
+    """
+    from repro.configs import get_config
+    from repro.models.model import build_model
+
+    out: Dict = {}
+    cnn_params, _, _ = train_cnn(steps=10)
+    lm_cfg = get_config("granite-3-8b", reduced=True)
+    lm_params = build_model(lm_cfg).init(jax.random.PRNGKey(0))
+
+    reps = 7
+    for name, params in (("cnn", cnn_params), ("lm", lm_params)):
+        times = {"serial": float("inf"), "batched": float("inf")}
+        trees = {}
+        for mode in times:                                # warm the jit cache
+            quantize_tree(params, method="squant", bits=4,
+                          batched=(mode == "batched"))
+        for _ in range(reps):       # interleave modes so machine drift cancels
+            for mode in ("serial", "batched"):
+                t0 = time.perf_counter()
+                trees[mode], rep = quantize_tree(params, method="squant",
+                                                 bits=4,
+                                                 batched=(mode == "batched"))
+                ms = (time.perf_counter() - t0) * 1e3
+                if ms < times[mode]:
+                    times[mode] = ms
+                    if mode == "batched":   # breakdown from the min rep, so
+                        # dispatch+sync stay consistent with the reported total
+                        out[f"pipeline_{name}_dispatch_ms"] = rep.dispatch_millis
+                        out[f"pipeline_{name}_sync_ms"] = rep.sync_millis
+                        out[f"pipeline_{name}_buckets"] = len(rep.buckets)
+                        out[f"pipeline_{name}_layers"] = len(rep.layers)
+        for mode in ("serial", "batched"):
+            out[f"pipeline_{name}_{mode}_ms"] = times[mode]
+        identical = all(
+            np.array_equal(a, b) for a, b in zip(_tree_codes(trees["serial"]),
+                                                 _tree_codes(trees["batched"])))
+        out[f"pipeline_{name}_codes_identical"] = bool(identical)
+        out[f"pipeline_{name}_speedup"] = times["serial"] / max(
+            times["batched"], 1e-9)
+        report(f"pipeline,{name},serial_ms={times['serial']:.1f},"
+               f"batched_ms={times['batched']:.1f},"
+               f"speedup={out[f'pipeline_{name}_speedup']:.2f}x,"
+               f"identical={identical}")
+    return out
 
 
 def run(report=print) -> Dict:
@@ -57,8 +120,14 @@ def run(report=print) -> Dict:
         ms = (time.perf_counter() - t0) / 3 * 1e3
         out[f"layer_{m}x{n}_ms"] = ms
         report(f"table3,layer,{m}x{n},squant_ms={ms:.2f}")
+
+    out.update(bench_pipeline(report))
     return out
 
 
 if __name__ == "__main__":
-    run()
+    res = run()
+    pipe = {k: v for k, v in res.items() if k.startswith("pipeline_")}
+    with open("BENCH_pipeline.json", "w") as f:
+        json.dump(pipe, f, indent=1)
+    print(f"wrote BENCH_pipeline.json ({len(pipe)} metrics)")

@@ -36,17 +36,23 @@ def main():
               f"mean|channel ASE|={np.abs(d.sum(1)).mean():6.3f}  "
               f"flips K/C={int(stats['flips_k'])}/{int(stats['flips_c'])}")
 
-    # --- whole model: sub-second, data-free ------------------------------
+    # --- whole model: sub-second, data-free, batched ---------------------
+    # The batched pipeline groups same-shape layers into buckets, runs one
+    # vmapped/Pallas dispatch per bucket, and syncs with the device once.
+    # backend="auto" resolves TPU→pallas kernel, CPU→jnp reference.
     cfg = get_config("granite-3-8b", reduced=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     quantize_tree(params, method="squant", bits=4, dequantize=False)  # jit
     t0 = time.perf_counter()
     qparams, report = quantize_tree(params, method="squant", bits=4,
-                                    dequantize=False)
+                                    dequantize=False, backend="auto")
     dt = time.perf_counter() - t0
     print(f"\nwhole {cfg.name}: {report.summary()} "
           f"(wall {dt*1e3:.0f} ms, no data, no BP)")
+    for b in report.buckets:
+        print(f"  bucket {b.key}: {b.num_layers} layers, "
+              f"{b.dispatch_millis:.2f} ms dispatch")
     from repro.quant.qtypes import QuantizedTensor
     qbytes = sum(
         leaf.nbytes() for leaf in jax.tree_util.tree_leaves(

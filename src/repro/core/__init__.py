@@ -1,3 +1,4 @@
 """SQuant core: the paper's contribution as a composable JAX module."""
 from repro.core.squant import SQuantConfig, squant, squant_codes  # noqa: F401
 from repro.core.pipeline import quantize_tree, QuantReport  # noqa: F401
+from repro.core.dispatch import BACKENDS, resolve_backend  # noqa: F401

@@ -1,0 +1,96 @@
+"""Backend dispatch for the batched quantization pipeline.
+
+``quantize_tree`` groups same-(shape, dtype) leaves into buckets; this module
+turns one stacked bucket ``(B, M, N)`` into int8 codes + per-row scales with a
+fixed, small number of asynchronous dispatches — no host sync. The
+``backend`` string is threaded down to ``kernels/ops.squant_flip_batched``:
+
+* ``"ref"``        — vmapped jnp core (``core.squant.squant_codes``); the
+                     production path on CPU.
+* ``"pallas"``     — compiled Pallas TPU kernel, one launch per bucket (the
+                     batch is flattened into rows — SQuant is row-independent,
+                     so ``(B, M, N) → (B*M, N)`` is exact, not approximate).
+* ``"interpret"``  — same kernel body executed by the Pallas interpreter
+                     (CPU validation of the TPU path).
+* ``"auto"``       — TPU→pallas, anything else→ref.
+
+Scales are computed by ONE jitted function regardless of backend, so flip
+decisions (which compare ``w/s`` against the integer grid) are bitwise
+comparable across backends. RTN has no custom kernel (it is a pure
+elementwise round); it runs as one jitted vmapped op regardless of backend.
+
+The serial per-layer path in ``core.pipeline`` calls these same helpers with
+``B=1``, which makes batched-vs-serial bit-exactness hold by construction
+while the batched path still exercises the stack/vmap equivalence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.quant.qtypes import qmax_for_bits
+from repro.quant.scales import compute_scale
+
+BACKENDS = ("auto", "ref", "pallas", "interpret")
+
+_METHOD_FLAGS = {
+    "squant":    (True, True),
+    "squant_e":  (False, False),
+    "squant_ek": (True, False),
+    "squant_ec": (False, True),
+}
+
+
+def resolve_backend(backend: str) -> str:
+    """Validate and resolve ``"auto"`` to a concrete backend."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; options {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+@functools.lru_cache(maxsize=None)
+def _scales_fn(bits: int, scale_method: str):
+    """jit(vmap(compute_scale)): the single scale source for all backends."""
+    return jax.jit(jax.vmap(
+        lambda w2d: compute_scale(w2d, bits, scale_method)))
+
+
+@functools.lru_cache(maxsize=None)
+def _rtn_fn(bits: int):
+    qmax = qmax_for_bits(bits)
+
+    def one(w2d, scale):
+        return jnp.clip(jnp.round(w2d / scale), -qmax, qmax).astype(jnp.int8)
+    return jax.jit(jax.vmap(one))
+
+
+def quantize_codes_batched(ws: jnp.ndarray, *, method: str, bits: int,
+                           group_size: Optional[int], scale_method: str = "max",
+                           backend: str = "ref"
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize one stacked bucket.
+
+    Args:
+      ws: (B, M, N) stack of same-shape row-major weight matrices.
+      group_size: effective kernel/group size for this bucket (None → whole
+        row, the paper's FC path), already clamped by the caller.
+
+    Returns ``(codes int8 (B, M, N), scales (B, M, 1))``. Everything is
+    dispatched asynchronously; the caller owns the single end-of-pipeline
+    sync.
+    """
+    scales = _scales_fn(bits, scale_method)(ws)
+    if method == "rtn":
+        codes = _rtn_fn(bits)(ws, scales)
+    else:
+        enable_k, enable_c = _METHOD_FLAGS[method]
+        codes = ops.squant_flip_batched(
+            ws, scales, bits=bits, group_size=group_size,
+            enable_k=enable_k, enable_c=enable_c, use_pallas=backend)
+    return codes, scales

@@ -2,8 +2,24 @@
 
 Walks a parameter pytree, quantizes every matmul weight with the requested
 data-free method, and returns (new_tree, report). This is the "on-the-fly
-framework" of Sec. 3.4: no data, no back-prop, per-layer wall time recorded
-(Table 3's protocol).
+framework" of Sec. 3.4: no data, no back-prop, wall time recorded (Table 3's
+protocol).
+
+Two execution modes:
+
+* ``batched=True`` (default) — leaves are grouped into same-(2-D view shape,
+  dtype, group) buckets; each bucket is stacked and quantized with ONE
+  asynchronous dispatch (vmapped jnp core or a single flattened Pallas
+  launch, see ``core.dispatch``), and the whole tree synchronizes with the
+  device ONCE at the end. ``QuantReport`` carries the per-bucket wall times
+  plus a dispatch/sync breakdown so Table-3-style numbers stay reportable.
+* ``batched=False`` — the legacy per-layer reference path: one quantization
+  call and one ``block_until_ready`` per leaf. Kept as the bit-exactness
+  oracle and the serial baseline for ``benchmarks/bench_time.py``.
+
+``backend`` selects the kernel implementation for the batched path
+(``"auto" | "ref" | "pallas" | "interpret"``, see ``core.dispatch.BACKENDS``);
+the serial path always uses the jnp reference.
 
 Conventions (shared with ``repro.models``):
 * dense kernels are dict leaves named ``w`` with shape (in, out);
@@ -25,23 +41,16 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import baselines
-from repro.core.squant import SQuantConfig, squant
-from repro.quant.qtypes import QuantizedTensor
+from repro.core.dispatch import (BACKENDS, quantize_codes_batched,
+                                 resolve_backend)
+from repro.quant.qtypes import QuantizedTensor, from_codes
 
 METHODS = ("rtn", "squant", "squant_e", "squant_ek", "squant_ec")
 
-
-def _method_cfg(method: str, bits: int, group_size: Optional[int],
-                scale_method: str) -> SQuantConfig:
-    table = {
-        "squant":    dict(enable_k=True, enable_c=True),
-        "squant_e":  dict(enable_k=False, enable_c=False),
-        "squant_ek": dict(enable_k=True, enable_c=False),
-        "squant_ec": dict(enable_k=False, enable_c=True),
-    }
-    return SQuantConfig(bits=bits, group_size=group_size,
-                        scale_method=scale_method, **table[method])
+# Module-level alias so tests can count device synchronizations: the batched
+# path calls this exactly once per quantize_tree, the serial path once per
+# quantized leaf.
+_sync = jax.block_until_ready
 
 
 def is_quantizable(path: Tuple[str, ...], leaf: Any) -> bool:
@@ -61,9 +70,17 @@ def is_quantizable(path: Tuple[str, ...], leaf: Any) -> bool:
 class LayerReport:
     path: str
     shape: Tuple[int, ...]
-    millis: float
+    millis: float              # batched mode: amortized bucket dispatch time
     method: str
     bits: int
+    bucket: str = ""           # bucket key this layer was quantized in
+
+
+@dataclasses.dataclass
+class BucketReport:
+    key: str                   # "(M, N)xB dtype gG"
+    num_layers: int
+    dispatch_millis: float     # host time to stack + dispatch this bucket
 
 
 @dataclasses.dataclass
@@ -72,85 +89,211 @@ class QuantReport:
     total_millis: float
     method: str
     bits: int
+    backend: str = "ref"
+    dispatch_millis: float = 0.0
+    sync_millis: float = 0.0
+    buckets: List[BucketReport] = dataclasses.field(default_factory=list)
 
     def summary(self) -> str:
-        return (f"{self.method} w{self.bits}: {len(self.layers)} layers in "
-                f"{self.total_millis:.1f} ms "
-                f"({self.total_millis / max(len(self.layers), 1):.2f} ms/layer)")
+        s = (f"{self.method} w{self.bits}: {len(self.layers)} layers in "
+             f"{self.total_millis:.1f} ms "
+             f"({self.total_millis / max(len(self.layers), 1):.2f} ms/layer)")
+        if self.buckets:
+            s += (f" [{len(self.buckets)} buckets, backend={self.backend}, "
+                  f"dispatch {self.dispatch_millis:.1f} ms + "
+                  f"sync {self.sync_millis:.1f} ms]")
+        return s
 
 
-def _quantize_leaf(leaf: jnp.ndarray, method: str, bits: int,
-                   group_size: Optional[int], scale_method: str
-                   ) -> QuantizedTensor:
-    """Quantize one kernel; returns QuantizedTensor in (out, in)-major layout."""
+# ---------------------------------------------------------------------------
+# Leaf planning: every quantizable leaf maps to a 2-D (out, in)-major view
+# ---------------------------------------------------------------------------
+
+def _plan_leaf(leaf: jnp.ndarray, method: str, group_size: Optional[int]
+               ) -> Tuple[jnp.ndarray, Tuple[int, ...], Optional[int]]:
+    """Return ``(w2d, qt_shape, eff_group)`` for one kernel leaf.
+
+    ``eff_group`` mirrors the clamping in ``core.squant.squant`` exactly
+    (group >= row length degenerates to the whole-row FC path; conv kernels
+    use K=KH*KW as the natural group) so batched results are bit-identical to
+    the per-layer path.
+    """
     if leaf.ndim == 2:                       # (in, out) -> (out, in)
         w2d = leaf.T
+        qt_shape = (leaf.shape[1], leaf.shape[0])
     elif leaf.ndim == 3:                     # (E, in, out) -> (E*out, in)
         e, i, o = leaf.shape
         w2d = jnp.transpose(leaf, (0, 2, 1)).reshape(e * o, i)
-    elif leaf.ndim == 4:                     # conv (KH,KW,in,out) -> (out,in,K)
+        qt_shape = (e * o, i)
+    elif leaf.ndim == 4:                     # conv (KH,KW,in,out) -> (out, in*K)
         kh, kw, ci, co = leaf.shape
-        w3d = jnp.transpose(leaf, (3, 2, 0, 1)).reshape(co, ci, kh * kw)
+        k = kh * kw
+        w2d = jnp.transpose(leaf, (3, 2, 0, 1)).reshape(co, ci * k)
         if method == "rtn":
-            return baselines.rtn(w3d.reshape(co, ci * kh * kw), bits,
-                                 scale_method=scale_method)
-        cfg = _method_cfg(method, bits, None, scale_method)
-        qt, _ = squant(w3d, cfg)
-        return qt
+            return w2d, (co, ci * k), None
+        return w2d, (co, ci, k), (None if k == 1 else k)
     else:
         raise ValueError(f"unsupported kernel rank {leaf.ndim}")
-
     if method == "rtn":
-        return baselines.rtn(w2d, bits, scale_method=scale_method)
-    cfg = _method_cfg(method, bits, group_size, scale_method)
-    qt, _ = squant(w2d, cfg)
-    return qt
+        return w2d, qt_shape, None
+    n = w2d.shape[1]
+    eff = None if (group_size is None or group_size >= n) else group_size
+    return w2d, qt_shape, eff
 
 
-def quantize_tree(params: Any, method: str = "squant", bits: int = 4,
-                  group_size: Optional[int] = 128, scale_method: str = "max",
-                  predicate: Optional[Callable] = None,
-                  dequantize: bool = False) -> Tuple[Any, QuantReport]:
-    """Quantize all matmul weights in a param tree.
+def _restore_dense(wq: jnp.ndarray, leaf_shape: Tuple[int, ...]
+                   ) -> jnp.ndarray:
+    """Fake-quant restore: (out, in)-major dequantized weights -> leaf layout."""
+    if len(leaf_shape) == 2:
+        return wq.T
+    if len(leaf_shape) == 3:
+        e, i, o = leaf_shape
+        return jnp.transpose(wq.reshape(e, o, i), (0, 2, 1))
+    kh, kw, ci, co = leaf_shape
+    return jnp.transpose(wq.reshape(co, ci, kh, kw), (2, 3, 1, 0))
 
-    dequantize=True returns float weights (fake-quant — for accuracy evals on
-    models whose forward pass expects dense arrays); otherwise leaves become
-    QuantizedTensor (real serving format).
-    """
-    if method not in METHODS:
-        raise ValueError(f"unknown method {method!r}; options {METHODS}")
-    pred = predicate or is_quantizable
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+# ---------------------------------------------------------------------------
+# Serial per-layer path (one dispatch + one device sync per leaf)
+# ---------------------------------------------------------------------------
+
+def _quantize_tree_serial(flat, treedef, pred, method, bits, group_size,
+                          scale_method, dequantize):
+    """Per-layer baseline: same dispatch helpers as the batched path, called
+    with B=1 and synchronized after every leaf (the pre-batching protocol
+    Table 3 timings were taken under)."""
     out_leaves = []
     reports: List[LayerReport] = []
     t_total = 0.0
     for keypath, leaf in flat:
-        path = tuple(getattr(k, "key", getattr(k, "idx", str(k)))
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", str(k))))
                      for k in keypath)
-        path = tuple(str(p) for p in path)
         if not pred(path, leaf):
             out_leaves.append(leaf)
             continue
         t0 = time.perf_counter()
-        qt = _quantize_leaf(leaf, method, bits, group_size, scale_method)
-        jax.block_until_ready(qt.data)
+        w2d, qt_shape, eff = _plan_leaf(leaf, method, group_size)
+        codes, scales = quantize_codes_batched(
+            w2d[None], method=method, bits=bits, group_size=eff,
+            scale_method=scale_method, backend="ref")
+        qt = from_codes(codes[0].reshape(qt_shape), scales[0], bits)
+        _sync(qt.data)
         ms = (time.perf_counter() - t0) * 1e3
         t_total += ms
         reports.append(LayerReport("/".join(path), tuple(leaf.shape), ms,
                                    method, bits))
         if dequantize:
-            wq = qt.dequantize(leaf.dtype)
-            if leaf.ndim == 2:
-                out_leaves.append(wq.T)
-            elif leaf.ndim == 3:
-                e, i, o = leaf.shape
-                out_leaves.append(
-                    jnp.transpose(wq.reshape(e, o, i), (0, 2, 1)))
-            else:
-                kh, kw, ci, co = leaf.shape
-                w = wq.reshape(co, ci, kh, kw)
-                out_leaves.append(jnp.transpose(w, (2, 3, 1, 0)))
+            out_leaves.append(_restore_dense(qt.dequantize(leaf.dtype),
+                                             tuple(leaf.shape)))
         else:
             out_leaves.append(qt)
     tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
-    return tree, QuantReport(reports, t_total, method, bits)
+    return tree, QuantReport(reports, t_total, method, bits, backend="ref")
+
+
+# ---------------------------------------------------------------------------
+# Batched path: bucket -> stack -> one dispatch per bucket -> one sync total
+# ---------------------------------------------------------------------------
+
+# Cap on the transient stacked-bucket buffer: buckets whose stack would
+# exceed this many bytes are dispatched in chunks, bounding peak memory at
+# params + one chunk instead of params + the largest bucket. Still one device
+# sync per tree.
+_MAX_STACK_BYTES = 1 << 30
+
+
+def _quantize_tree_batched(flat, treedef, pred, method, bits, group_size,
+                           scale_method, dequantize, backend):
+    t_begin = time.perf_counter()
+    out_leaves: List[Any] = [None] * len(flat)
+    # bucket key -> list of (leaf index, path, leaf, w2d, qt_shape)
+    buckets: Dict[Tuple, List] = {}
+    for idx, (keypath, leaf) in enumerate(flat):
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", str(k))))
+                     for k in keypath)
+        if not pred(path, leaf):
+            out_leaves[idx] = leaf
+            continue
+        w2d, qt_shape, eff = _plan_leaf(leaf, method, group_size)
+        key = (tuple(w2d.shape), str(w2d.dtype), eff)
+        buckets.setdefault(key, []).append(
+            (idx, "/".join(path), leaf, w2d, qt_shape))
+
+    layer_reports: List[LayerReport] = []
+    bucket_reports: List[BucketReport] = []
+    quantized: List[Any] = []                 # everything the final sync waits on
+    n_q = sum(len(v) for v in buckets.values())
+    for key, all_entries in buckets.items():
+        (m, n), dtype, eff = key[0], key[1], key[2]
+        layer_bytes = m * n * jnp.dtype(dtype).itemsize
+        chunk = max(1, min(len(all_entries), _MAX_STACK_BYTES // layer_bytes))
+        for c0 in range(0, len(all_entries), chunk):
+            entries = all_entries[c0:c0 + chunk]
+            tag = f"({m},{n})x{len(entries)} {dtype} g{eff}"
+            tb0 = time.perf_counter()
+            if len(entries) == 1:                        # singleton: no copy
+                ws = entries[0][3][None]
+            else:
+                ws = jnp.stack([e[3] for e in entries])  # (B, M, N)
+            codes, scales = quantize_codes_batched(
+                ws, method=method, bits=bits, group_size=eff,
+                scale_method=scale_method, backend=backend)
+            for bi, (idx, path, leaf, _, qt_shape) in enumerate(entries):
+                qt = from_codes(codes[bi].reshape(qt_shape), scales[bi], bits)
+                if dequantize:
+                    out = _restore_dense(qt.dequantize(leaf.dtype),
+                                         tuple(leaf.shape))
+                else:
+                    out = qt
+                out_leaves[idx] = out
+                quantized.append(out)
+            bucket_ms = (time.perf_counter() - tb0) * 1e3
+            bucket_reports.append(BucketReport(tag, len(entries), bucket_ms))
+            for idx, path, leaf, _, _ in entries:
+                layer_reports.append(LayerReport(path, tuple(leaf.shape),
+                                                 bucket_ms / len(entries),
+                                                 method, bits, bucket=tag))
+    dispatch_ms = (time.perf_counter() - t_begin) * 1e3
+
+    t_sync0 = time.perf_counter()
+    _sync(quantized)                          # the ONE device sync
+    sync_ms = (time.perf_counter() - t_sync0) * 1e3
+    # fold the sync into per-layer numbers so Σ layer.millis ≈ total
+    for lr in layer_reports:
+        lr.millis += sync_ms / max(n_q, 1)
+
+    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    total_ms = (time.perf_counter() - t_begin) * 1e3
+    return tree, QuantReport(layer_reports, total_ms, method, bits,
+                             backend=backend, dispatch_millis=dispatch_ms,
+                             sync_millis=sync_ms, buckets=bucket_reports)
+
+
+def quantize_tree(params: Any, method: str = "squant", bits: int = 4,
+                  group_size: Optional[int] = 128, scale_method: str = "max",
+                  predicate: Optional[Callable] = None,
+                  dequantize: bool = False, backend: str = "auto",
+                  batched: bool = True) -> Tuple[Any, QuantReport]:
+    """Quantize all matmul weights in a param tree.
+
+    dequantize=True returns float weights (fake-quant — for accuracy evals on
+    models whose forward pass expects dense arrays); otherwise leaves become
+    QuantizedTensor (real serving format).
+
+    backend: kernel implementation for the batched path — one of
+    ``core.dispatch.BACKENDS`` (``"auto"`` resolves TPU→pallas, CPU→ref).
+    batched=False falls back to the legacy per-layer loop (one dispatch and
+    one device sync per leaf); it ignores ``backend`` and always runs the jnp
+    reference.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; options {METHODS}")
+    backend = resolve_backend(backend)
+    pred = predicate or is_quantizable
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    if not batched:
+        return _quantize_tree_serial(flat, treedef, pred, method, bits,
+                                     group_size, scale_method, dequantize)
+    return _quantize_tree_batched(flat, treedef, pred, method, bits,
+                                  group_size, scale_method, dequantize,
+                                  backend)

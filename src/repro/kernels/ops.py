@@ -11,6 +11,7 @@ Dispatch policy:
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -42,6 +43,49 @@ def squant_flip(w2d: jnp.ndarray, scale: jnp.ndarray, *, bits: int,
                              interpret=(use_pallas == "interpret"))
     return _ref.squant_ref(w2d, scale, bits=bits, group_size=group_size,
                            enable_k=enable_k, enable_c=enable_c)
+
+
+def squant_flip_batched(w3: jnp.ndarray, scale3: jnp.ndarray, *, bits: int,
+                        group_size: Optional[int], enable_k: bool = True,
+                        enable_c: bool = True, use_pallas: str = "auto",
+                        tm: int = 8) -> jnp.ndarray:
+    """SQuant codes for a (B, M, N) stack of same-shape matrices.
+
+    This is the model-level batched entry point: ``quantize_tree`` stacks all
+    same-(shape, dtype) layers of a network into one bucket and issues ONE
+    dispatch here instead of one per layer.
+
+    SQuant is row-independent (every stage — E rounding, K group flips, C
+    channel flips — operates within a single output channel), so the kernel
+    backends flatten the batch into rows and launch the Pallas kernel once
+    over ``(B*M, N)``; that is exact, not an approximation. The reference
+    backend vmaps the jnp core instead. ``group_size=None`` (whole-row FC
+    path) and the E&C-without-K ablation have no kernel specialization and
+    always take the reference path.
+    """
+    if use_pallas == "auto":
+        use_pallas = "pallas" if _on_tpu() else "ref"
+    b, m, n = w3.shape
+    if (use_pallas in ("pallas", "interpret") and group_size is not None
+            and (enable_k or not enable_c)):
+        codes = squant_pallas(w3.reshape(b * m, n),
+                              scale3.reshape(b * m, 1), bits=bits,
+                              group_size=group_size, enable_k=enable_k,
+                              enable_c=enable_c, tm=tm,
+                              interpret=(use_pallas == "interpret"))
+        return codes.reshape(b, m, n)
+    return _vmapped_ref(bits, group_size, enable_k, enable_c)(w3, scale3)
+
+
+@functools.lru_cache(maxsize=None)
+def _vmapped_ref(bits: int, group_size: Optional[int], enable_k: bool,
+                 enable_c: bool):
+    """jit(vmap(squant_ref)) cached per static config — without the outer jit
+    the vmap traces through the jnp core op-by-op and per-dispatch overhead
+    eats the batching win on small buckets."""
+    fn = functools.partial(_ref.squant_ref, bits=bits, group_size=group_size,
+                           enable_k=enable_k, enable_c=enable_c)
+    return jax.jit(jax.vmap(fn))
 
 
 def dequant_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,

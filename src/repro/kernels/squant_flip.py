@@ -165,8 +165,12 @@ def squant_pallas(w2d: jnp.ndarray, scale: jnp.ndarray, *, bits: int,
     )(w, inv_s)
 
     if enable_c:
-        # keep the (TM_C, NG, NG) comparison tensor under ~2 MiB of VMEM
+        # keep the (TM_C, NG, NG) comparison tensor under ~2 MiB of VMEM;
+        # tm_c must divide the (tm-padded) m or the floor-divided grid
+        # leaves the last m % tm_c rows of gflip unwritten
         tm_c = max(1, min(tm, (1 << 19) // max(ng * ng, 1)))
+        while m % tm_c:
+            tm_c -= 1
         gflip = pl.pallas_call(
             squant_c_kernel,
             grid=(m // tm_c,),

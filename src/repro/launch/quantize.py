@@ -18,6 +18,7 @@ import jax
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config, list_archs
+from repro.core.dispatch import BACKENDS
 from repro.core.pipeline import quantize_tree
 from repro.models.model import build_model
 
@@ -33,6 +34,13 @@ def main():
                              "squant_ec"])
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--group-size", type=int, default=128)
+    ap.add_argument("--backend", default="auto", choices=list(BACKENDS),
+                    help="kernel backend: auto (TPU→pallas, CPU→ref), ref "
+                         "(jnp), pallas (compiled TPU kernel), interpret "
+                         "(kernel body on CPU, for validation)")
+    ap.add_argument("--serial", action="store_true",
+                    help="legacy per-layer loop with one device sync per "
+                         "layer (baseline for the batched pipeline)")
     ap.add_argument("--out", default="/tmp/repro_quantized")
     args = ap.parse_args()
 
@@ -49,15 +57,24 @@ def main():
 
     qtree, report = quantize_tree(params, method=args.method, bits=args.bits,
                                   group_size=args.group_size,
-                                  dequantize=True)
+                                  dequantize=True, backend=args.backend,
+                                  batched=not args.serial)
     print(f"[quantize] {report.summary()}")
     os.makedirs(args.out, exist_ok=True)
     Checkpointer(args.out, async_save=False).save(0, qtree, {"step": 0})
     with open(os.path.join(args.out, "quant_report.json"), "w") as f:
         json.dump({"method": args.method, "bits": args.bits,
+                   "backend": report.backend,
+                   "batched": not args.serial,
                    "total_ms": report.total_millis,
+                   "dispatch_ms": report.dispatch_millis,
+                   "sync_ms": report.sync_millis,
+                   "buckets": [{"key": b.key, "layers": b.num_layers,
+                                "ms": b.dispatch_millis}
+                               for b in report.buckets],
                    "layers": [{"path": l.path, "shape": list(l.shape),
-                               "ms": l.millis} for l in report.layers]},
+                               "ms": l.millis, "bucket": l.bucket}
+                              for l in report.layers]},
                   f, indent=1)
     print(f"[quantize] wrote {args.out}")
 

@@ -30,17 +30,23 @@ def qmax_for_bits(bits: int) -> int:
     return 2 ** (bits - 1) - 1
 
 
+@jax.jit
+def _pack_int4_jit(codes: jax.Array) -> jax.Array:
+    lo = codes[..., 0::2].astype(jnp.int8)
+    hi = codes[..., 1::2].astype(jnp.int8)
+    return ((hi << 4) | (lo & 0x0F)).astype(jnp.int8)
+
+
 def pack_int4(codes: jax.Array) -> jax.Array:
     """Pack int8 codes in [-8, 7] into int8 bytes, two nibbles per byte.
 
     Last dim must be even. Little-nibble-first: out[..., i] holds codes
-    (2i) in bits 0-3 and (2i+1) in bits 4-7.
+    (2i) in bits 0-3 and (2i+1) in bits 4-7. Jitted: the strided slices are
+    gather ops that dominate quantization wall time when run eagerly.
     """
     if codes.shape[-1] % 2 != 0:
         raise ValueError(f"last dim must be even, got {codes.shape}")
-    lo = codes[..., 0::2].astype(jnp.int8)
-    hi = codes[..., 1::2].astype(jnp.int8)
-    return ((hi << 4) | (lo & 0x0F)).astype(jnp.int8)
+    return _pack_int4_jit(codes)
 
 
 def unpack_int4(packed: jax.Array) -> jax.Array:

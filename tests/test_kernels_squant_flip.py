@@ -32,6 +32,19 @@ def test_pallas_matches_ref_shapes(rng, m, n, g, bits):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_pallas_c_stage_tile_not_dividing_m(rng):
+    """Many groups shrink the C-stage tile via the VMEM cap; a tm_c that does
+    not divide the padded M used to leave the last rows' gflip unwritten
+    (regression: grid was floor-divided)."""
+    m, g, ng = 8, 4, 300          # cap: 2^19 // 300^2 = 5 → must shrink to 4
+    w = _case(rng, m, ng * g)
+    scale = compute_scale(w, 4, "max")
+    got = ops.squant_flip(w, scale, bits=4, group_size=g,
+                          use_pallas="interpret", tm=8)
+    want = ref.squant_ref(w, scale, bits=4, group_size=g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_pallas_bf16_input_invariants(rng):
     """bf16 inputs produce coarse δ grids with exact .5 ties where summation
     order legitimately differs between implementations — so for bf16 we

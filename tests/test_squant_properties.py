@@ -5,7 +5,11 @@ the flipping procedure, checked over randomized shapes / bit-widths / scales.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dep: pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.squant import SQuantConfig, squant, squant_codes
 from repro.quant.qtypes import pack_int4, unpack_int4, qmax_for_bits
