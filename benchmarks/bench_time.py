@@ -35,32 +35,40 @@ def _tree_codes(tree):
 
 
 def bench_pipeline(report=print) -> Dict:
-    """Serial per-layer loop vs the batched bucketed pipeline (ISSUE 1).
+    """Serial per-layer loop vs batched bucketed vs sharded pipeline.
 
-    Toy CNN + one reduced LM; asserts both paths emit identical int8 codes.
-    Returns a ``BENCH_pipeline.json``-compatible dict.
+    Toy CNN + one reduced LM; asserts all paths emit identical int8 codes.
+    The sharded column row-partitions each bucket over a 1-axis 'data' mesh
+    spanning every host device (1 on the plain CPU container; run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real
+    multi-device measurement). Returns a ``BENCH_pipeline.json``-compatible
+    dict.
     """
     from repro.configs import get_config
+    from repro.launch.mesh import make_quantize_mesh
     from repro.models.model import build_model
 
     out: Dict = {}
+    mesh = make_quantize_mesh()
+    out["pipeline_mesh_devices"] = int(mesh.size)
+    modes = {"serial": {"batched": False},
+             "batched": {},
+             "sharded": {"mesh": mesh}}
     cnn_params, _, _ = train_cnn(steps=10)
     lm_cfg = get_config("granite-3-8b", reduced=True)
     lm_params = build_model(lm_cfg).init(jax.random.PRNGKey(0))
 
     reps = 7
     for name, params in (("cnn", cnn_params), ("lm", lm_params)):
-        times = {"serial": float("inf"), "batched": float("inf")}
+        times = {mode: float("inf") for mode in modes}
         trees = {}
-        for mode in times:                                # warm the jit cache
-            quantize_tree(params, method="squant", bits=4,
-                          batched=(mode == "batched"))
+        for mode, kw in modes.items():                    # warm the jit cache
+            quantize_tree(params, method="squant", bits=4, **kw)
         for _ in range(reps):       # interleave modes so machine drift cancels
-            for mode in ("serial", "batched"):
+            for mode, kw in modes.items():
                 t0 = time.perf_counter()
                 trees[mode], rep = quantize_tree(params, method="squant",
-                                                 bits=4,
-                                                 batched=(mode == "batched"))
+                                                 bits=4, **kw)
                 ms = (time.perf_counter() - t0) * 1e3
                 if ms < times[mode]:
                     times[mode] = ms
@@ -70,16 +78,19 @@ def bench_pipeline(report=print) -> Dict:
                         out[f"pipeline_{name}_sync_ms"] = rep.sync_millis
                         out[f"pipeline_{name}_buckets"] = len(rep.buckets)
                         out[f"pipeline_{name}_layers"] = len(rep.layers)
-        for mode in ("serial", "batched"):
+        for mode in modes:
             out[f"pipeline_{name}_{mode}_ms"] = times[mode]
+        base = _tree_codes(trees["serial"])
         identical = all(
-            np.array_equal(a, b) for a, b in zip(_tree_codes(trees["serial"]),
-                                                 _tree_codes(trees["batched"])))
+            np.array_equal(a, b)
+            for mode in ("batched", "sharded")
+            for a, b in zip(base, _tree_codes(trees[mode])))
         out[f"pipeline_{name}_codes_identical"] = bool(identical)
         out[f"pipeline_{name}_speedup"] = times["serial"] / max(
             times["batched"], 1e-9)
         report(f"pipeline,{name},serial_ms={times['serial']:.1f},"
                f"batched_ms={times['batched']:.1f},"
+               f"sharded_ms={times['sharded']:.1f},"
                f"speedup={out[f'pipeline_{name}_speedup']:.2f}x,"
                f"identical={identical}")
     return out

@@ -30,7 +30,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.distributed import compat
 from repro.kernels import ops
 from repro.quant.qtypes import qmax_for_bits
 from repro.quant.scales import compute_scale
@@ -94,3 +96,79 @@ def quantize_codes_batched(ws: jnp.ndarray, *, method: str, bits: int,
             ws, scales, bits=bits, group_size=group_size,
             enable_k=enable_k, enable_c=enable_c, use_pallas=backend)
     return codes, scales
+
+
+# ---------------------------------------------------------------------------
+# Sharded bucket dispatch (multi-device row partitioning)
+# ---------------------------------------------------------------------------
+# SQuant's flip objective is row-independent: every stage (E rounding, K
+# group flips, C channel flips) and the scale computation operate within a
+# single output-channel row. Partitioning the stacked bucket's B*M rows
+# across a mesh axis is therefore EXACT — each device runs the same jitted
+# helpers (`quantize_codes_batched` with B=1) on its row slab, so sharded
+# codes/scales are bitwise identical to the unsharded batched path by
+# construction.
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fn(mesh, mesh_axis: str, method: str, bits: int,
+                group_size: Optional[int], scale_method: str, backend: str):
+    """jit(shard_map(...)) cached per (mesh, static config); shapes are
+    handled by jit retracing."""
+
+    def slab(local):                      # local: (rows/ndev, N) row slab
+        codes, scales = quantize_codes_batched(
+            local[None], method=method, bits=bits, group_size=group_size,
+            scale_method=scale_method, backend=backend)
+        return codes[0], scales[0]
+
+    spec = P(mesh_axis, None)
+    return jax.jit(compat.shard_map(
+        slab, mesh, in_specs=spec, out_specs=(spec, spec),
+        manual_axes={mesh_axis}))
+
+
+def quantize_codes_sharded(ws: jnp.ndarray, *, method: str, bits: int,
+                           group_size: Optional[int],
+                           scale_method: str = "max", backend: str = "ref",
+                           mesh, mesh_axis: str = "data"
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize one stacked bucket with its rows partitioned over
+    ``mesh_axis`` of ``mesh``.
+
+    The (B, M, N) stack is flattened to (B*M, N) rows, zero-padded so the
+    axis size divides the row count, and dispatched under ``shard_map`` —
+    each device quantizes its own slab with the same backend helpers the
+    single-device path uses. Padding rows quantize to code 0 and are sliced
+    off before the un-flatten. Results are bit-identical to
+    :func:`quantize_codes_batched`.
+    """
+    sizes = dict(mesh.shape)
+    if mesh_axis not in sizes:
+        raise ValueError(f"mesh has no {mesh_axis!r} axis; axes: "
+                         f"{tuple(sizes)}")
+    b, m, n = ws.shape
+    ndev = int(sizes[mesh_axis])
+    rows = b * m
+    # shard_rows is the single owner of the partition scheme: the pad here
+    # and the QuantReport accounting both derive from it.
+    pad = sum(p for _, p in shard_rows(rows, ndev))
+    flat = ws.reshape(rows, n)
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    codes, scales = _sharded_fn(mesh, mesh_axis, method, bits, group_size,
+                                scale_method, backend)(flat)
+    return (codes[:rows].reshape(b, m, n),
+            scales[:rows].reshape(b, m, 1))
+
+
+def shard_rows(total_rows: int, ndev: int):
+    """Per-device (rows, pad_rows) for one sharded dispatch — the partition
+    scheme ``quantize_codes_sharded`` implements (contiguous equal slabs,
+    zero rows padding the tail devices)."""
+    pad = (-total_rows) % ndev
+    per = (total_rows + pad) // ndev
+    out = []
+    for d in range(ndev):
+        real = max(0, min(per, total_rows - d * per))
+        out.append((real, per - real))
+    return out

@@ -5,7 +5,7 @@ data-free method, and returns (new_tree, report). This is the "on-the-fly
 framework" of Sec. 3.4: no data, no back-prop, wall time recorded (Table 3's
 protocol).
 
-Two execution modes:
+Execution modes:
 
 * ``batched=True`` (default) — leaves are grouped into same-(2-D view shape,
   dtype, group) buckets; each bucket is stacked and quantized with ONE
@@ -13,6 +13,13 @@ Two execution modes:
   launch, see ``core.dispatch``), and the whole tree synchronizes with the
   device ONCE at the end. ``QuantReport`` carries the per-bucket wall times
   plus a dispatch/sync breakdown so Table-3-style numbers stay reportable.
+* ``batched=True, mesh=...`` — same bucketing, but each bucket's rows are
+  partitioned over the mesh's ``mesh_axis`` under ``shard_map``: every device
+  quantizes its own output-channel slab (SQuant is row-independent, so the
+  partition is exact — codes/scales are bitwise identical to the unsharded
+  path). Output ``QuantizedTensor`` codes+scales inherit the source param's
+  sharding rules (``distributed.sharding.quantized_tensor_shardings``), and
+  the report gains a per-device shard breakdown.
 * ``batched=False`` — the legacy per-layer reference path: one quantization
   call and one ``block_until_ready`` per leaf. Kept as the bit-exactness
   oracle and the serial baseline for ``benchmarks/bench_time.py``.
@@ -34,7 +41,6 @@ the (out, in) layout — the serving layer (`models.layers.linear` /
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -42,8 +48,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import (BACKENDS, quantize_codes_batched,
-                                 resolve_backend)
-from repro.quant.qtypes import QuantizedTensor, from_codes
+                                 quantize_codes_sharded, resolve_backend,
+                                 shard_rows)
+from repro.quant.qtypes import (BucketReport, LayerReport, QuantReport,
+                                QuantizedTensor, ShardReport, from_codes)
 
 METHODS = ("rtn", "squant", "squant_e", "squant_ek", "squant_ec")
 
@@ -64,45 +72,6 @@ def is_quantizable(path: Tuple[str, ...], leaf: Any) -> bool:
     if name == "w_conv" and leaf.ndim == 4:
         return True
     return False
-
-
-@dataclasses.dataclass
-class LayerReport:
-    path: str
-    shape: Tuple[int, ...]
-    millis: float              # batched mode: amortized bucket dispatch time
-    method: str
-    bits: int
-    bucket: str = ""           # bucket key this layer was quantized in
-
-
-@dataclasses.dataclass
-class BucketReport:
-    key: str                   # "(M, N)xB dtype gG"
-    num_layers: int
-    dispatch_millis: float     # host time to stack + dispatch this bucket
-
-
-@dataclasses.dataclass
-class QuantReport:
-    layers: List[LayerReport]
-    total_millis: float
-    method: str
-    bits: int
-    backend: str = "ref"
-    dispatch_millis: float = 0.0
-    sync_millis: float = 0.0
-    buckets: List[BucketReport] = dataclasses.field(default_factory=list)
-
-    def summary(self) -> str:
-        s = (f"{self.method} w{self.bits}: {len(self.layers)} layers in "
-             f"{self.total_millis:.1f} ms "
-             f"({self.total_millis / max(len(self.layers), 1):.2f} ms/layer)")
-        if self.buckets:
-            s += (f" [{len(self.buckets)} buckets, backend={self.backend}, "
-                  f"dispatch {self.dispatch_millis:.1f} ms + "
-                  f"sync {self.sync_millis:.1f} ms]")
-        return s
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +172,11 @@ _MAX_STACK_BYTES = 1 << 30
 
 
 def _quantize_tree_batched(flat, treedef, pred, method, bits, group_size,
-                           scale_method, dequantize, backend):
+                           scale_method, dequantize, backend, mesh,
+                           mesh_axis):
+    ndev = int(dict(mesh.shape)[mesh_axis]) if mesh is not None else 1
+    shard_acc = [[0, 0] for _ in range(ndev)]   # per-device [rows, pad_rows]
+
     t_begin = time.perf_counter()
     out_leaves: List[Any] = [None] * len(flat)
     # bucket key -> list of (leaf index, path, leaf, w2d, qt_shape)
@@ -217,7 +190,7 @@ def _quantize_tree_batched(flat, treedef, pred, method, bits, group_size,
         w2d, qt_shape, eff = _plan_leaf(leaf, method, group_size)
         key = (tuple(w2d.shape), str(w2d.dtype), eff)
         buckets.setdefault(key, []).append(
-            (idx, "/".join(path), leaf, w2d, qt_shape))
+            (idx, path, leaf, w2d, qt_shape))
 
     layer_reports: List[LayerReport] = []
     bucket_reports: List[BucketReport] = []
@@ -235,14 +208,30 @@ def _quantize_tree_batched(flat, treedef, pred, method, bits, group_size,
                 ws = entries[0][3][None]
             else:
                 ws = jnp.stack([e[3] for e in entries])  # (B, M, N)
-            codes, scales = quantize_codes_batched(
-                ws, method=method, bits=bits, group_size=eff,
-                scale_method=scale_method, backend=backend)
+            if mesh is None:
+                codes, scales = quantize_codes_batched(
+                    ws, method=method, bits=bits, group_size=eff,
+                    scale_method=scale_method, backend=backend)
+            else:
+                codes, scales = quantize_codes_sharded(
+                    ws, method=method, bits=bits, group_size=eff,
+                    scale_method=scale_method, backend=backend,
+                    mesh=mesh, mesh_axis=mesh_axis)
+                for d, (r, p) in enumerate(
+                        shard_rows(len(entries) * m, ndev)):
+                    shard_acc[d][0] += r
+                    shard_acc[d][1] += p
             for bi, (idx, path, leaf, _, qt_shape) in enumerate(entries):
                 qt = from_codes(codes[bi].reshape(qt_shape), scales[bi], bits)
                 if dequantize:
                     out = _restore_dense(qt.dequantize(leaf.dtype),
                                          tuple(leaf.shape))
+                elif mesh is not None:
+                    # codes/scales inherit the source param's sharding rules
+                    from repro.distributed.sharding import \
+                        quantized_tensor_shardings
+                    out = qt.with_placement(
+                        *quantized_tensor_shardings(mesh, path, qt))
                 else:
                     out = qt
                 out_leaves[idx] = out
@@ -250,7 +239,8 @@ def _quantize_tree_batched(flat, treedef, pred, method, bits, group_size,
             bucket_ms = (time.perf_counter() - tb0) * 1e3
             bucket_reports.append(BucketReport(tag, len(entries), bucket_ms))
             for idx, path, leaf, _, _ in entries:
-                layer_reports.append(LayerReport(path, tuple(leaf.shape),
+                layer_reports.append(LayerReport("/".join(path),
+                                                 tuple(leaf.shape),
                                                  bucket_ms / len(entries),
                                                  method, bits, bucket=tag))
     dispatch_ms = (time.perf_counter() - t_begin) * 1e3
@@ -264,16 +254,21 @@ def _quantize_tree_batched(flat, treedef, pred, method, bits, group_size,
 
     tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
     total_ms = (time.perf_counter() - t_begin) * 1e3
+    shards = [ShardReport(d, r, p) for d, (r, p) in enumerate(shard_acc)] \
+        if mesh is not None else []
     return tree, QuantReport(layer_reports, total_ms, method, bits,
                              backend=backend, dispatch_millis=dispatch_ms,
-                             sync_millis=sync_ms, buckets=bucket_reports)
+                             sync_millis=sync_ms, buckets=bucket_reports,
+                             mesh_axis=mesh_axis if mesh is not None else "",
+                             mesh_size=ndev, shards=shards)
 
 
 def quantize_tree(params: Any, method: str = "squant", bits: int = 4,
                   group_size: Optional[int] = 128, scale_method: str = "max",
                   predicate: Optional[Callable] = None,
                   dequantize: bool = False, backend: str = "auto",
-                  batched: bool = True) -> Tuple[Any, QuantReport]:
+                  batched: bool = True, mesh=None,
+                  mesh_axis: str = "data") -> Tuple[Any, QuantReport]:
     """Quantize all matmul weights in a param tree.
 
     dequantize=True returns float weights (fake-quant — for accuracy evals on
@@ -285,15 +280,27 @@ def quantize_tree(params: Any, method: str = "squant", bits: int = 4,
     batched=False falls back to the legacy per-layer loop (one dispatch and
     one device sync per leaf); it ignores ``backend`` and always runs the jnp
     reference.
+
+    mesh: a ``jax.sharding.Mesh`` with a ``mesh_axis`` axis (see
+    ``launch.mesh.make_quantize_mesh``) shards every bucket's rows across
+    that axis under shard_map — exact (row-independent objective), results
+    bitwise identical to ``mesh=None``. Sharded runs require ``batched=True``
+    and report a per-device breakdown in ``QuantReport.shards``.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; options {METHODS}")
+    if mesh is not None and mesh_axis not in dict(mesh.shape):
+        raise ValueError(f"mesh has no {mesh_axis!r} axis; axes: "
+                         f"{tuple(dict(mesh.shape))}")
     backend = resolve_backend(backend)
     pred = predicate or is_quantizable
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     if not batched:
+        if mesh is not None:
+            raise ValueError("mesh= requires batched=True (the serial "
+                             "baseline is single-device by definition)")
         return _quantize_tree_serial(flat, treedef, pred, method, bits,
                                      group_size, scale_method, dequantize)
     return _quantize_tree_batched(flat, treedef, pred, method, bits,
                                   group_size, scale_method, dequantize,
-                                  backend)
+                                  backend, mesh, mesh_axis)

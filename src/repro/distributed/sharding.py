@@ -28,6 +28,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class AxisRules:
@@ -84,6 +86,10 @@ def _mesh_axis_sizes(mesh) -> Dict[str, int]:
             sizes.pop(n, None)
     except Exception:
         pass
+    # Old jax meshes carry no axis types; an enclosing compat.shard_map
+    # records its manual axes in a thread-local instead.
+    for n in compat.manual_axes_in_scope():
+        sizes.pop(n, None)
     return sizes
 
 
@@ -130,13 +136,7 @@ def shard_act(x: jax.Array, logical: Sequence[Optional[str]],
 
 
 def _current_mesh():
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
-            return None
-        return mesh
-    except Exception:
-        return None
+    return compat.current_mesh()
 
 
 def shard_logits(logits: jax.Array) -> jax.Array:
@@ -240,6 +240,29 @@ def make_param_shardings(mesh: Mesh, params_shape: Any,
         return NamedSharding(mesh, spec)
 
     return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def quantized_tensor_shardings(mesh: Mesh, path: Tuple[str, ...], qt
+                               ) -> Tuple[NamedSharding, NamedSharding]:
+    """(codes, scale) NamedShardings for a pipeline ``QuantizedTensor``.
+
+    ``path`` is the source kernel's tree path (…, parent, "w"); the codes and
+    scales inherit the *serving-format* rules the same kernel would get as
+    plain ``w_q``/``w_q4``/``w_scale`` arrays (transposed Megatron placement,
+    divisibility fallbacks included). The pipeline's 2-D carriers collapse
+    any stacked dims (experts, scan periods, conv taps) into the row dim, so
+    rules written for the full stacked rank keep their trailing (row, col)
+    entries — non-divisible collapsed dims fall back to replication inside
+    ``logical_to_mesh``.
+    """
+    qname = "w_q4" if qt.packed else "w_q"
+    logical_q = param_sharding_rules(path[:-1] + (qname,), qt.data)
+    logical_s = param_sharding_rules(path[:-1] + ("w_scale",), qt.scale)
+    logical_q = tuple(logical_q)[-qt.data.ndim:]
+    logical_s = tuple(logical_s)[-qt.scale.ndim:]
+    spec_q = logical_to_mesh(logical_q, qt.data.shape, mesh, _PARAM_RULES)
+    spec_s = logical_to_mesh(logical_s, qt.scale.shape, mesh, _PARAM_RULES)
+    return NamedSharding(mesh, spec_q), NamedSharding(mesh, spec_s)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np   # noqa: E402
 
 from repro.configs import SHAPES, get_config, list_archs      # noqa: E402
+from repro.distributed import compat                          # noqa: E402
 from repro.distributed.sharding import (logical_to_mesh,      # noqa: E402
                                         make_cache_shardings,
                                         make_param_shardings)
@@ -342,13 +343,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     elif debug:
         from repro.launch.mesh import make_debug_mesh
         mesh = make_debug_mesh(multi_pod=multi_pod)
-        jax.sharding.set_mesh(mesh)
+        compat.activate_mesh(mesh)
         dp_total = int(np.prod([s for a, s in zip(mesh.axis_names,
                                                   mesh.devices.shape)
                                 if a in ("pod", "data")]))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
-        jax.sharding.set_mesh(mesh)
+        compat.activate_mesh(mesh)
         dp_total = int(np.prod([s for a, s in zip(mesh.axis_names,
                                                   mesh.devices.shape)
                                 if a in ("pod", "data")]))
@@ -426,6 +427,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     result["fits_16gb"] = result["hbm_per_chip_gb"] < 16.0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # old jax: one dict per program
+        cost = cost[0] if cost else {}
     result["hlo_flops"] = float(cost.get("flops", -1.0))
     result["hlo_bytes"] = float(cost.get("bytes accessed", -1.0))
 

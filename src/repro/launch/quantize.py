@@ -41,6 +41,12 @@ def main():
     ap.add_argument("--serial", action="store_true",
                     help="legacy per-layer loop with one device sync per "
                          "layer (baseline for the batched pipeline)")
+    ap.add_argument("--mesh", default="off",
+                    help="sharded quantization: 'off' (default), 'auto' "
+                         "(1-axis 'data' mesh over every host device), or an "
+                         "integer device count. Row-partitions each bucket "
+                         "under shard_map; bit-identical to the unsharded "
+                         "path")
     ap.add_argument("--out", default="/tmp/repro_quantized")
     args = ap.parse_args()
 
@@ -55,10 +61,17 @@ def main():
     else:
         params = model.init(jax.random.PRNGKey(0))
 
+    mesh = None
+    if args.mesh != "off":
+        from repro.launch.mesh import make_quantize_mesh
+        mesh = make_quantize_mesh(None if args.mesh == "auto"
+                                  else int(args.mesh))
+        print(f"[quantize] sharding rows over mesh {dict(mesh.shape)}")
+
     qtree, report = quantize_tree(params, method=args.method, bits=args.bits,
                                   group_size=args.group_size,
                                   dequantize=True, backend=args.backend,
-                                  batched=not args.serial)
+                                  batched=not args.serial, mesh=mesh)
     print(f"[quantize] {report.summary()}")
     os.makedirs(args.out, exist_ok=True)
     Checkpointer(args.out, async_save=False).save(0, qtree, {"step": 0})
@@ -69,6 +82,11 @@ def main():
                    "total_ms": report.total_millis,
                    "dispatch_ms": report.dispatch_millis,
                    "sync_ms": report.sync_millis,
+                   "mesh_axis": report.mesh_axis,
+                   "mesh_size": report.mesh_size,
+                   "shards": [{"device": s.device, "rows": s.rows,
+                               "pad_rows": s.pad_rows}
+                              for s in report.shards],
                    "buckets": [{"key": b.key, "layers": b.num_layers,
                                 "ms": b.dispatch_millis}
                                for b in report.buckets],

@@ -52,9 +52,10 @@ def main():
 
     mesh = None
     if args.production:
+        from repro.distributed import compat
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=args.pod_compress)
-        jax.sharding.set_mesh(mesh)
+        compat.activate_mesh(mesh)
 
     ocfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                        decay_steps=args.steps)

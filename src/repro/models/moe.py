@@ -14,6 +14,7 @@ per-channel SQuant scales).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Tuple
 
 import jax
@@ -100,7 +101,13 @@ def moe_ffn(params, x: jnp.ndarray, *, n_experts: int, top_k: int,
     if dropless:
         capacity = t
     else:
-        capacity = max(1, int(t * top_k * capacity_factor / n_experts))
+        # GShard capacity rounds UP: floor would truncate the whole
+        # capacity_factor slack at small per-block token counts (e.g.
+        # t=4, k=2, E=4, cf=1.25 → floor(2.5)=2 drops tokens that the
+        # 1.25 factor exists to keep, making quantized-vs-dense logits
+        # diverge discontinuously whenever a router prob moves a token
+        # across the cutoff).
+        capacity = max(1, math.ceil(t * top_k * capacity_factor / n_experts))
         capacity = min(capacity, t)
 
     # position of each (token, k) within its expert's capacity buffer

@@ -1,8 +1,11 @@
-"""Quantized tensor container + int4 packing.
+"""Quantized tensor container + int4 packing + quantization-run reports.
 
 A ``QuantizedTensor`` is a pytree holding integer codes plus dequantization
 scales. It is the on-disk / in-memory serving format produced by every
-quantizer in this framework (SQuant and the baselines alike).
+quantizer in this framework (SQuant and the baselines alike). The report
+dataclasses at the bottom (``QuantReport`` and friends) are the wall-time /
+dispatch / shard accounting emitted by ``core.pipeline.quantize_tree`` and
+consumed by the launch CLIs and benchmarks.
 
 Conventions
 -----------
@@ -17,7 +20,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +109,73 @@ class QuantizedTensor:
     def nbytes(self) -> int:
         """True serving footprint in bytes (codes + scales)."""
         return int(np.prod(self.data.shape)) + 4 * int(np.prod(self.scale.shape))
+
+    def with_placement(self, data_sharding, scale_sharding
+                       ) -> "QuantizedTensor":
+        """The same tensor with codes/scales placed on the given shardings
+        (asynchronous ``device_put`` — no host sync)."""
+        return QuantizedTensor(
+            data=jax.device_put(self.data, data_sharding),
+            scale=jax.device_put(self.scale, scale_sharding),
+            bits=self.bits, group_size=self.group_size, shape=self.shape)
+
+
+# ---------------------------------------------------------------------------
+# Quantization-run reports (filled by core.pipeline.quantize_tree)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerReport:
+    path: str
+    shape: Tuple[int, ...]
+    millis: float              # batched mode: amortized bucket dispatch time
+    method: str
+    bits: int
+    bucket: str = ""           # bucket key this layer was quantized in
+
+
+@dataclasses.dataclass
+class BucketReport:
+    key: str                   # "(M, N)xB dtype gG"
+    num_layers: int
+    dispatch_millis: float     # host time to stack + dispatch this bucket
+
+
+@dataclasses.dataclass
+class ShardReport:
+    """Per-device row accounting for the sharded (``mesh=``) pipeline."""
+    device: int                # position along the sharded mesh axis
+    rows: int                  # real weight rows quantized on this device
+    pad_rows: int              # padding rows added so the axis divides
+
+
+@dataclasses.dataclass
+class QuantReport:
+    layers: List[LayerReport]
+    total_millis: float
+    method: str
+    bits: int
+    backend: str = "ref"
+    dispatch_millis: float = 0.0
+    sync_millis: float = 0.0
+    buckets: List[BucketReport] = dataclasses.field(default_factory=list)
+    mesh_axis: str = ""        # sharded runs: name of the partitioned axis
+    mesh_size: int = 1         # devices along that axis (1 → unsharded)
+    shards: List[ShardReport] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> str:
+        s = (f"{self.method} w{self.bits}: {len(self.layers)} layers in "
+             f"{self.total_millis:.1f} ms "
+             f"({self.total_millis / max(len(self.layers), 1):.2f} ms/layer)")
+        if self.buckets:
+            s += (f" [{len(self.buckets)} buckets, backend={self.backend}, "
+                  f"dispatch {self.dispatch_millis:.1f} ms + "
+                  f"sync {self.sync_millis:.1f} ms]")
+        if self.mesh_size > 1:
+            rows = sum(sh.rows for sh in self.shards)
+            s += (f" [sharded {self.mesh_axis}={self.mesh_size}, "
+                  f"{rows} rows]")
+        return s
 
 
 def from_codes(codes: jax.Array, scale: jax.Array, bits: int,

@@ -13,6 +13,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.distributed import compat
+
 
 def choose_mesh_shape(n_devices: int, prefer_model: int = 16,
                       pod_size: Optional[int] = None
@@ -34,6 +36,4 @@ def make_elastic_mesh(n_devices: Optional[int] = None,
                       prefer_model: int = 16, pod_size: Optional[int] = None):
     n = n_devices or len(jax.devices())
     shape, names = choose_mesh_shape(n, prefer_model, pod_size)
-    return jax.make_mesh(
-        shape, names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return compat.make_mesh(shape, names)

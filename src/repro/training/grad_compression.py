@@ -114,26 +114,59 @@ def ring_allreduce_i8(flat: jnp.ndarray, axis: str, axis_size: int
     return out.reshape(-1)
 
 
-def compress_allreduce_grads(grads: Any, error: Any, axis: str,
-                             axis_size: int) -> Tuple[Any, Any]:
-    """int8 ring all-reduce of a gradient pytree across ``axis`` with error
-    feedback. Returns (mean_grads, new_error). Call inside shard_map."""
-    flat, meta, _ = _flatten_pad(grads)
-    eflat, _, _ = _flatten_pad(error)
+# ---------------------------------------------------------------------------
+# Split form for the train step.
+#
+# Old-jax (0.4.x) partial-auto shard_map cannot lower ``lax.axis_index`` /
+# ``lax.ppermute`` (PartitionId is unsupported under SPMD partitioning, and
+# collective-permute trips a manual-subgroup check in the partitioner), so
+# the train step cannot run the ring inside the manual-'pod' grad step whose
+# 'data'/'model' axes stay auto. Instead: the *local* half (flatten, error
+# feedback — pure per-pod ops) runs inside the grad shard_map, the ring runs
+# in a second, fully-manual shard_map, and the unflatten + optimizer update
+# happen outside in plain GSPMD. ``train_loop.make_train_step`` wires the
+# three stages together.
+# ---------------------------------------------------------------------------
+
+def compress_local(grads: Any, error: Any) -> Tuple[jnp.ndarray, Any]:
+    """Local half of the compressed all-reduce.
+
+    Flattens grads+error (BLOCK-padded) and computes the next error-feedback
+    buffer. No collectives — safe inside a partial-auto shard_map.
+    Returns ``(flat, new_error_tree)``; the error tree is rebuilt with the
+    *error's* own meta so its pod-local leaves keep their leading
+    ``init_pod_error`` dim (shapes round-trip step to step — no retrace).
+    """
+    flat, _, _ = _flatten_pad(grads)
+    eflat, emeta, _ = _flatten_pad(error)
     flat = flat + eflat
-    # pad so chunks divide evenly across the ring
-    n = flat.shape[0]
-    pad = (-n) % (axis_size * BLOCK)
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    reduced = ring_allreduce_i8(flat, axis, axis_size) / axis_size
-    # error feedback: what compression lost this step, replayed next step.
-    # approximate: difference between the local contribution and its
-    # quantized image is captured per-hop; we track the end-to-end residual
-    # of our own shard's chunk (cheap, effective in practice).
     codes, scale = _quant_block(flat.reshape(-1, BLOCK))
     deq = (codes.astype(jnp.float32) * scale).reshape(-1)
-    new_err_flat = (flat - deq)[:n]
-    if pad:
-        reduced = reduced[:n]
-    return _unflatten(reduced, meta), _unflatten(new_err_flat, meta)
+    return flat, _unflatten(flat - deq, emeta)
+
+
+def ring_pad(flat: jnp.ndarray, axis_size: int) -> jnp.ndarray:
+    """Zero-pad so the ring's chunks divide evenly across ``axis_size``."""
+    pad = (-flat.shape[0]) % (axis_size * BLOCK)
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def flat_meta(template: Any):
+    """The ``_unflatten`` meta for a pytree of arrays/ShapeDtypeStructs —
+    static, so the caller can rebuild the gradient tree *outside* the
+    shard_map that produced the flat vector."""
+    leaves, tdef = jax.tree_util.tree_flatten(template)
+    shapes = [tuple(l.shape) for l in leaves]
+    n = 0
+    for shp in shapes:
+        sz = 1
+        for s in shp:
+            sz *= s
+        n += sz
+    return (tdef, shapes, [l.dtype for l in leaves], n)
+
+
+def unflatten_grads(flat: jnp.ndarray, template: Any) -> Any:
+    """Rebuild a gradient pytree shaped like ``template`` from the reduced
+    flat vector (inverse of the flatten in ``compress_local``)."""
+    return _unflatten(flat, flat_meta(template))

@@ -23,7 +23,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.training.grad_compression import compress_allreduce_grads
+from repro.distributed import compat
+from repro.training.grad_compression import (compress_local,
+                                             ring_allreduce_i8, ring_pad,
+                                             unflatten_grads)
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 
@@ -91,18 +94,31 @@ def make_train_step(model, opt_cfg: AdamWConfig, *, microbatches: int = 1,
         return plain_step
     n_pods = dict(mesh.shape)["pod"]
 
-    def pod_step(params, opt_state, err, batch):
+    # Three stages (old-jax partial-auto shard_map cannot lower ppermute /
+    # axis_index, so the ring cannot live inside the grad step — see
+    # grad_compression module comment):
+    #   1. manual-'pod' shard_map ('data'/'model' auto → GSPMD): pod-local
+    #      grads + the local half of the compression (error feedback).
+    #   2. fully-manual shard_map: int8 ring all-reduce of the flat payload.
+    #   3. plain GSPMD: unflatten + AdamW update.
+
+    def local_step(params, err, batch):
         # every pytree arrives pod-LOCAL: batch is this pod's slice; params
-        # and opt_state are replicated across pods; err is per-pod.
+        # are replicated across pods; err is per-pod.
         loss, metrics, grads = _accumulate_grads(loss_fn, params, batch,
                                                  microbatches)
-        grads, new_err = compress_allreduce_grads(grads, err, "pod", n_pods)
-        params, opt_state, info = adamw_update(params, grads, opt_state,
-                                               opt_cfg)
+        flat, new_err = compress_local(grads, err)
+        flat = ring_pad(flat, n_pods)
         metrics = dict(metrics)
-        metrics.update(info)
-        metrics["loss"] = jax.lax.pmean(loss, "pod")
-        return params, opt_state, new_err, metrics
+        metrics["loss"] = loss
+        # pmean all scalars so the replicated out_specs are well-defined
+        metrics = jax.tree_util.tree_map(
+            lambda m: jax.lax.pmean(m, "pod"), metrics)
+        return flat[None], new_err, metrics
+
+    def ring_step(flat):
+        # flat: (1, L) pod-local slab of the stacked payload
+        return ring_allreduce_i8(flat[0], "pod", n_pods)[None]
 
     rep = P()          # replicated over the manual 'pod' axis
     pod0 = P("pod")    # leading pod dim
@@ -111,17 +127,22 @@ def make_train_step(model, opt_cfg: AdamWConfig, *, microbatches: int = 1,
         return jax.tree_util.tree_map(lambda _: spec, tree)
 
     def wrapped(params, opt_state, err, batch):
-        f = jax.shard_map(
-            pod_step, mesh=mesh,
-            in_specs=(specs_like(params, rep), specs_like(opt_state, rep),
-                      specs_like(err, pod0), specs_like(batch, pod0)),
-            out_specs=(specs_like(params, rep), specs_like(opt_state, rep),
-                       specs_like(err, pod0),
-                       {k: rep for k in ("loss", "xent", "moe_aux", "lr",
-                                         "grad_norm")}),
-            axis_names=frozenset({"pod"}),   # data/model stay auto (GSPMD)
-            check_vma=False)
-        return f(params, opt_state, err, batch)
+        f1 = compat.shard_map(
+            local_step, mesh,
+            in_specs=(specs_like(params, rep), specs_like(err, pod0),
+                      specs_like(batch, pod0)),
+            out_specs=(pod0, specs_like(err, pod0), rep),
+            manual_axes={"pod"})   # data/model stay auto (GSPMD)
+        flat, new_err, metrics = f1(params, err, batch)
+        f2 = compat.shard_map(ring_step, mesh, in_specs=pod0,
+                              out_specs=pod0)
+        reduced = f2(flat)            # every pod row holds the full sum
+        grads = unflatten_grads(reduced[0] / n_pods, params)
+        params, opt_state, info = adamw_update(params, grads, opt_state,
+                                               opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(info)
+        return params, opt_state, new_err, metrics
 
     return wrapped
 

@@ -1,11 +1,22 @@
 """Shared test fixtures.
 
 NOTE: no XLA_FLAGS device-count override here — smoke tests and benches must
-see the single real CPU device. Multi-device tests spawn subprocesses that
-set the flag themselves (see tests/test_sharding.py, tests/test_dryrun_small.py).
+see the single real CPU device. Multi-device tests go through the
+``multidevice_run`` fixture below, which spawns a fresh interpreter with
+``--xla_force_host_platform_device_count=<N>`` appended to XLA_FLAGS
+(subprocess-safe: jax locks the device count at first init, so the flag can
+never be applied inside the already-initialized test process). CI's
+``multidevice`` lane additionally sets the flag on the parent process and
+runs only the sharded tests in-process.
 """
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 @pytest.fixture
@@ -19,3 +30,30 @@ def grid_weights(rng, m, n, step=1.0 / 64.0, span=400):
     identical flip decisions (no accumulation-order ambiguity)."""
     ints = rng.integers(-span, span + 1, size=(m, n))
     return (ints * step).astype(np.float32)
+
+
+def run_multidevice_script(script: str, devices: int = 8,
+                           timeout: int = 600) -> str:
+    """Run ``script`` in a subprocess that sees ``devices`` host-platform
+    devices. Appends to any existing XLA_FLAGS rather than clobbering them,
+    and puts src/ on PYTHONPATH. Raises AssertionError with the subprocess
+    stderr on non-zero exit."""
+    env = dict(os.environ)
+    flag = f"--xla_force_host_platform_device_count={devices}"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+    env["PYTHONPATH"] = SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, \
+        f"--- stdout ---\n{out.stdout[-2000:]}\n--- stderr ---\n" \
+        f"{out.stderr[-4000:]}"
+    return out.stdout
+
+
+@pytest.fixture
+def multidevice_run():
+    """Fixture handle for :func:`run_multidevice_script` — the harness CI's
+    CPU-only runners use to genuinely exercise ≥2-device meshes."""
+    return run_multidevice_script

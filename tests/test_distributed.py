@@ -1,37 +1,24 @@
 """Distributed tests (run in subprocesses with XLA host-device overrides so
 the main test process keeps a single device): sharding rules, int8 cross-pod
 gradient all-reduce, pod-compressed training, elastic checkpoint resharding.
+
+All mesh/shard_map construction goes through ``repro.distributed.compat`` so
+the same scripts run on jax 0.4.x and on the newer axis-typed API.
 """
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
 
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
-
-def _run(script: str, devices: int = 8, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
-
-
-def test_param_sharding_rules():
-    out = _run(textwrap.dedent("""
+def test_param_sharding_rules(multidevice_run):
+    out = multidevice_run(textwrap.dedent("""
         import warnings; warnings.filterwarnings("ignore")
         import jax
+        from repro.distributed.compat import make_mesh
         from repro.distributed.sharding import make_param_shardings
         S = jax.ShapeDtypeStruct
         f32 = jax.numpy.float32
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         fake = {
             "attn": {"wq": {"w": S((64, 128), f32)},
                      "wo": {"w": S((128, 64), f32)}},
@@ -66,20 +53,18 @@ def test_param_sharding_rules():
     assert "head PartitionSpec('data', 'model')" in out
 
 
-def test_int8_ring_allreduce():
-    out = _run(textwrap.dedent("""
+def test_int8_ring_allreduce(multidevice_run):
+    out = multidevice_run(textwrap.dedent("""
         import warnings; warnings.filterwarnings("ignore")
-        import functools
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.compat import make_mesh, shard_map
         from repro.training.grad_compression import ring_allreduce_i8, BLOCK
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         xs = rng.normal(size=(4, 4 * BLOCK * 2)).astype(np.float32)
-        f = jax.shard_map(lambda x: ring_allreduce_i8(x[0], "pod", 4)[None],
-                          mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-                          axis_names=frozenset({"pod"}), check_vma=False)
+        f = shard_map(lambda x: ring_allreduce_i8(x[0], "pod", 4)[None],
+                      mesh, in_specs=P("pod"), out_specs=P("pod"))
         got = np.asarray(f(jnp.asarray(xs)))
         want = xs.sum(0)
         rel = np.abs(got - want).max() / np.abs(want).max()
@@ -92,20 +77,20 @@ def test_int8_ring_allreduce():
     assert "IDENTICAL True" in out
 
 
-def test_pod_compressed_training_learns():
+def test_pod_compressed_training_learns(multidevice_run):
     """Pod-compressed step trains the tiny model comparably to plain DP."""
-    out = _run(textwrap.dedent("""
+    out = multidevice_run(textwrap.dedent("""
         import warnings; warnings.filterwarnings("ignore")
         import dataclasses
         import numpy as np, jax, jax.numpy as jnp
         from repro.configs import get_config
         from repro.data.synthetic import markov_batches
+        from repro.distributed.compat import activate_mesh, make_mesh
         from repro.models.model import build_model
         from repro.training.optimizer import AdamWConfig, adamw_init
         from repro.training.train_loop import (init_pod_error,
                                                make_train_step)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_config("granite-3-8b", reduced=True)
         cfg = dataclasses.replace(cfg, dtype="float32", n_layers=2,
                                   d_model=32, n_heads=2, n_kv_heads=1,
@@ -113,7 +98,7 @@ def test_pod_compressed_training_learns():
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         ocfg = AdamWConfig(lr=3e-3, warmup_steps=0, decay_steps=100)
-        jax.sharding.set_mesh(mesh)
+        activate_mesh(mesh)
         plain = jax.jit(make_train_step(model, ocfg))
         comp = jax.jit(make_train_step(model, ocfg, pod_compress=True,
                                        mesh=mesh))
@@ -122,12 +107,17 @@ def test_pod_compressed_training_learns():
         pp, po = params, adamw_init(params)
         cp, co = params, adamw_init(params)
         err = init_pod_error(params, 2)
+        err_shapes = [e.shape for e in jax.tree_util.tree_leaves(err)]
         pl, cl = [], []
         for i in range(60):
             b = next(it)
             pp, po, m1 = plain(pp, po, b)
             cp, co, err, m2 = comp(cp, co, err, b)
             pl.append(float(m1["loss"])); cl.append(float(m2["loss"]))
+        # error-feedback buffers keep the init_pod_error layout step to
+        # step (a shape drift would silently retrace the jitted step)
+        assert [e.shape for e in jax.tree_util.tree_leaves(err)] \
+            == err_shapes
         print("PLAIN", np.mean(pl[:5]), np.mean(pl[-5:]))
         print("COMP", np.mean(cl[:5]), np.mean(cl[-5:]))
     """), devices=8, timeout=900)
@@ -138,7 +128,7 @@ def test_pod_compressed_training_learns():
     assert abs(comp1 - plain1) < 0.25 * plain0    # and tracks plain DP
 
 
-def test_elastic_checkpoint_reshard():
+def test_elastic_checkpoint_reshard(multidevice_run):
     """Save on an 8-device mesh, restore onto a 4-device mesh."""
     import tempfile
     with tempfile.TemporaryDirectory() as tmp:
@@ -157,7 +147,7 @@ def test_elastic_checkpoint_reshard():
             ck.save(7, params, {{"step": jnp.asarray(7)}})
             print("SAVED", mesh.devices.shape)
         """)
-        _run(save, devices=8)
+        multidevice_run(save, devices=8)
         restore = textwrap.dedent(f"""
             import warnings; warnings.filterwarnings("ignore")
             import numpy as np, jax, jax.numpy as jnp
@@ -178,7 +168,7 @@ def test_elastic_checkpoint_reshard():
                                 .reshape(64, 32))
             print("RESTORED", step, ok, w.sharding.spec)
         """)
-        out = _run(restore, devices=4)
+        out = multidevice_run(restore, devices=4)
         assert "RESTORED 7 True" in out
 
 
