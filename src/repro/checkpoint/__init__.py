@@ -1,2 +1,3 @@
-"""Sharded, async, reshard-on-restore checkpointing."""
-from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401
+"""Sharded, async, reshard-on-restore checkpointing (fp + quantized)."""
+from repro.checkpoint.checkpointer import (Checkpointer,  # noqa: F401
+                                           CheckpointMetaError)

@@ -1,18 +1,30 @@
 """Checkpointing: sharded .npz payloads + JSON index, async save, atomic
-commit, reshard-on-restore.
+commit, reshard-on-restore — for fp training state AND quantized serving
+trees.
 
 Layout:
     <dir>/step_000100/
         shard_00000.npz      (flat-key → array chunks owned by this host)
-        index.json           (tree structure, shapes, dtypes, shard map)
-        COMMITTED            (written last — a checkpoint without it is
-                              ignored by restore: torn saves are harmless)
+        index.json           (tree structure, shapes, dtypes, quant meta)
+        COMMITTED            (written last — a step dir without it, or with
+                              an unparseable index.json, is invisible to
+                              restore and to the serve reload watcher:
+                              torn saves are harmless)
 
 Save is shard-agnostic: every leaf is written as the full logical array
 (single-host container) or per-host shards (multi-host: each host writes its
 addressable chunks). Restore never assumes the saving topology — it
-reassembles from the index and reshards to the *current* mesh, which is what
-makes elastic restarts (different chip counts) work.
+reassembles from the index and reshards to the *current* mesh
+(``mesh=`` on ``restore_serving`` routes through
+``distributed.sharding``/``distributed.compat``), which is what makes
+elastic restarts (different chip counts) work.
+
+Quantized checkpoints (``save_serving`` with ``quant_meta``) hold the
+serving-format ``w_q``/``w_q4``/``w_scale`` trees from ``quant.apply``
+natively — int4 nibbles stay packed two-per-int8-byte on disk — and record
+``{"format": "quantized", "quant": {bits, method, group_size, report…}}``
+in ``index.json`` so restore can refuse a tree that does not match the
+requested serve config instead of silently dequantizing garbage.
 """
 from __future__ import annotations
 
@@ -21,10 +33,15 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointMetaError(ValueError):
+    """A checkpoint's index.json is unreadable or contradicts the caller's
+    expectations (e.g. quantized w4 restored into a w8 serve config)."""
 
 
 def _flatten(tree: Any):
@@ -57,6 +74,31 @@ class Checkpointer:
             for k, v in flat.items():
                 payload[f"{name}::{k}"] = np.asarray(v)
         self.wait()
+        self._dispatch(step, payload, meta)
+
+    def save_serving(self, step: int, params: Any,
+                     quant_meta: Optional[Dict[str, Any]] = None):
+        """Save a serving weight tree (fp, or a quantized qdict tree from
+        ``quant.apply.quantize_params_sharded``).
+
+        ``quant_meta`` marks the checkpoint as quantized and must carry at
+        least ``bits`` and ``method`` (plus group_size / QuantReport digest);
+        packed int4 codes are written as-is — nibbles stay packed on disk.
+        """
+        flat, _ = _flatten(params)
+        payload = {f"params::{k}": np.asarray(v) for k, v in flat.items()}
+        meta = {"step": step, "trees": {"params": {"keys": sorted(flat)}},
+                "format": "fp", "quant": None}
+        if quant_meta is not None:
+            missing = {"bits", "method"} - set(quant_meta)
+            if missing:
+                raise ValueError(f"quant_meta missing {sorted(missing)}")
+            meta["format"] = "quantized"
+            meta["quant"] = dict(quant_meta)
+        self.wait()
+        self._dispatch(step, payload, meta)
+
+    def _dispatch(self, step: int, payload, meta):
         if self.async_save:
             self._thread = threading.Thread(
                 target=self._write, args=(step, payload, meta), daemon=True)
@@ -83,10 +125,21 @@ class Checkpointer:
         self._gc()
 
     def _gc(self):
-        steps = self.list_steps()
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        """Keep the newest ``keep`` loadable steps; everything else —
+        including torn/corrupt step dirs, which ``list_steps`` hides but
+        which would otherwise accumulate forever — is deleted. Writers are
+        atomic (payload + COMMITTED land in a ``.tmp`` dir, then one
+        rename), so a non-``.tmp`` invalid dir is never an in-flight save."""
+        keep = set(self.list_steps()[-self.keep:])
+        for d in sorted(os.listdir(self.dir)):
+            if not d.startswith("step_") or d.endswith(".tmp"):
+                continue
+            try:
+                s = int(d.split("_")[1])
+            except ValueError:
+                continue
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     def wait(self):
         if self._thread is not None:
@@ -95,18 +148,47 @@ class Checkpointer:
 
     # --------------------------------------------------------------- restore
     def list_steps(self):
+        """Committed, loadable steps. A step dir missing COMMITTED (torn
+        save) or whose index.json does not parse (torn/corrupt metadata) is
+        skipped — both restore and the serve reload watcher key off this."""
         out = []
         for d in sorted(os.listdir(self.dir)):
-            if d.startswith("step_") and not d.endswith(".tmp") and \
-                    os.path.exists(os.path.join(self.dir, d, "COMMITTED")):
-                out.append(int(d.split("_")[1]))
+            if not d.startswith("step_") or d.endswith(".tmp"):
+                continue
+            if not os.path.exists(os.path.join(self.dir, d, "COMMITTED")):
+                continue
+            try:
+                with open(os.path.join(self.dir, d, "index.json")) as f:
+                    json.load(f)
+            except (OSError, ValueError):
+                continue
+            out.append(int(d.split("_")[1]))
         return out
+
+    def read_meta(self, step: int) -> Dict[str, Any]:
+        """Parsed index.json for a committed step."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        if not os.path.exists(os.path.join(d, "COMMITTED")):
+            raise CheckpointMetaError(f"step {step}: no COMMITTED marker "
+                                      f"(torn save?) in {d}")
+        try:
+            with open(os.path.join(d, "index.json")) as f:
+                return json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointMetaError(f"step {step}: unreadable index.json "
+                                      f"({e})") from e
 
     def restore(self, step: int, shardings: Optional[Any] = None,
                 template: Optional[Tuple[Any, Any]] = None):
         """Returns (params, opt_state, step). ``template`` provides the tree
         structures; ``shardings`` (same structure) reshards onto the current
         mesh (elastic restore)."""
+        meta = self.read_meta(step)
+        if meta.get("format") == "quantized":
+            raise CheckpointMetaError(
+                f"step {step} is a quantized serving checkpoint "
+                f"(quant={meta.get('quant')}); restore it with "
+                f"restore_serving(), not the training-state restore()")
         d = os.path.join(self.dir, f"step_{step:08d}")
         data = np.load(os.path.join(d, "shard_00000.npz"))
 
@@ -149,11 +231,14 @@ class Checkpointer:
             return self._restore_raw(steps[-1])
         return self.restore(steps[-1], shardings, template)
 
-    def _restore_raw(self, step: int):
+    def _restore_raw(self, step: int, to_jax: bool = True):
         """Tree-structure-free restore (single-host): rebuilds nested dicts
-        from the flat key paths."""
+        from the flat key paths. ``to_jax=False`` keeps leaves as host numpy
+        arrays (for callers that place them on devices themselves — one
+        transfer instead of commit-to-default-device-then-reshard)."""
         d = os.path.join(self.dir, f"step_{step:08d}")
         data = np.load(os.path.join(d, "shard_00000.npz"))
+        conv = jax.numpy.asarray if to_jax else (lambda a: a)
 
         def insert(root, path, value):
             node = root
@@ -164,8 +249,7 @@ class Checkpointer:
         trees = {"params": {}, "opt": {}}
         for full_key in data.files:
             name, key = full_key.split("::", 1)
-            insert(trees[name], key.split("/"), jax.numpy.asarray(
-                data[full_key]))
+            insert(trees[name], key.split("/"), conv(data[full_key]))
 
         def listify(node):
             """Convert dicts with integer-contiguous keys back to lists."""
@@ -181,3 +265,54 @@ class Checkpointer:
         params = listify(trees["params"])
         opt = listify(trees["opt"])
         return params, opt, step
+
+    def restore_serving(self, step: Optional[int] = None,
+                        expect: Optional[Dict[str, Any]] = None,
+                        mesh=None) -> Tuple[Any, Dict[str, Any], int]:
+        """Restore a serving weight tree → ``(params, meta, step)``.
+
+        Loads the newest committed step when ``step`` is None (torn/corrupt
+        dirs are invisible). Works for both fp checkpoints (training saves —
+        the opt tree is ignored) and native quantized ones.
+
+        ``expect`` carries the serve config's quant expectations
+        (``{"quantize_weights": method|None, "weight_bits": int}``): a
+        quantized checkpoint whose ``bits``/``method`` metadata mismatch it
+        raises :class:`CheckpointMetaError` instead of silently dequantizing
+        garbage. fp checkpoints always pass (the caller re-quantizes).
+
+        ``mesh``: reshard-on-restore — every leaf is ``device_put`` onto the
+        current mesh's parameter shardings (``distributed.sharding`` rules,
+        which cover ``w_q``/``w_q4``/``w_scale`` leaves; bit-exact for any
+        device count because the full logical arrays live on disk). Leaves
+        stay on the host until the single placing transfer — a full tree is
+        never first committed to one default device.
+        """
+        if step is None:
+            steps = self.list_steps()
+            if not steps:
+                raise FileNotFoundError(f"no committed checkpoint in "
+                                        f"{self.dir}")
+            step = steps[-1]
+        meta = self.read_meta(step)
+        quant = meta.get("quant")
+        if quant is not None and expect is not None:
+            want_m = expect.get("quantize_weights")
+            want_b = expect.get("weight_bits")
+            if want_m is None:
+                raise CheckpointMetaError(
+                    f"step {step} holds {quant['method']} w{quant['bits']} "
+                    f"weights but the serve config requests unquantized "
+                    f"serving")
+            if quant.get("bits") != want_b or quant.get("method") != want_m:
+                raise CheckpointMetaError(
+                    f"step {step} quant metadata mismatch: checkpoint is "
+                    f"{quant.get('method')} w{quant.get('bits')}, serve "
+                    f"config requests {want_m} w{want_b}")
+        params, _, _ = self._restore_raw(step, to_jax=False)
+        if mesh is not None:
+            from repro.distributed.sharding import reshard_serving_tree
+            params = reshard_serving_tree(params, mesh)
+        else:
+            params = jax.tree_util.tree_map(jax.numpy.asarray, params)
+        return params, meta, step

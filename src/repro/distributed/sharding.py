@@ -265,6 +265,17 @@ def quantized_tensor_shardings(mesh: Mesh, path: Tuple[str, ...], qt
     return NamedSharding(mesh, spec_q), NamedSharding(mesh, spec_s)
 
 
+def reshard_serving_tree(tree: Any, mesh: Mesh) -> Any:
+    """Place every leaf of a serving weight tree (fp params or the quantized
+    ``w_q``/``w_q4``/``w_scale`` qdict format) onto ``mesh``'s parameter
+    shardings — the reshard-on-restore path: a tree checkpointed from an
+    8-device mesh lands bit-exactly on a 1- or 2-device mesh because the
+    checkpoint holds full logical arrays and ``device_put`` only re-splits
+    them. Asynchronous (no host sync)."""
+    shardings = make_param_shardings(mesh, tree)
+    return jax.tree_util.tree_map(jax.device_put, tree, shardings)
+
+
 # ---------------------------------------------------------------------------
 # Cache sharding rules (serving)
 # ---------------------------------------------------------------------------

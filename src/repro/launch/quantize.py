@@ -48,6 +48,15 @@ def main():
                          "under shard_map; bit-identical to the unsharded "
                          "path")
     ap.add_argument("--out", default="/tmp/repro_quantized")
+    ap.add_argument("--serving-ckpt", default=None, metavar="DIR",
+                    help="additionally write a *native* quantized serving "
+                         "checkpoint (w_q/w_q4+w_scale qdict tree, int4 "
+                         "kept packed on disk, quant metadata in "
+                         "index.json) that repro.launch.serve "
+                         "--reload-from hot-loads without re-quantizing")
+    ap.add_argument("--serving-step", type=int, default=0,
+                    help="step number for --serving-ckpt (watchers reload "
+                         "steps in increasing order)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -95,6 +104,22 @@ def main():
                               for l in report.layers]},
                   f, indent=1)
     print(f"[quantize] wrote {args.out}")
+
+    if args.serving_ckpt:
+        # the serving checkpoint needs the qdict layout (stack dims kept,
+        # plain shardable arrays), which only the serving-format quantizer
+        # emits — a separate pass from the pipeline run above, so its
+        # metadata records this pass's own timing rather than the batched
+        # run's backend/mesh digest.
+        from repro.quant.apply import quantize_params_serving
+        qserve, meta = quantize_params_serving(params, args.bits,
+                                               method=args.method,
+                                               group_size=args.group_size)
+        Checkpointer(args.serving_ckpt, async_save=False).save_serving(
+            args.serving_step, qserve, quant_meta=meta)
+        print(f"[quantize] wrote serving checkpoint step "
+              f"{args.serving_step} → {args.serving_ckpt} "
+              f"({meta['leaf_format']})")
 
 
 if __name__ == "__main__":

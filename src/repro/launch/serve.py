@@ -1,8 +1,17 @@
-"""Serving CLI: on-the-fly data-free quantization + batched generation.
+"""Serving CLI: on-the-fly data-free quantization + batched generation,
+with optional zero-downtime weight reloads from a checkpoint directory.
 
 Example:
     python -m repro.launch.serve --arch granite-3-8b --reduced \
         --quantize squant --bits 8 --prompts "hello" "world"
+
+Hot reload: watch a checkpoint dir (the trainer's, or one written by
+``repro.launch.quantize --serving-ckpt``) and swap new COMMITTED steps in
+between decode rounds — fp steps are re-quantized on the fly (sub-second,
+data-free: the point of SQuant), quantized steps load natively:
+
+    python -m repro.launch.serve --quantize squant --bits 8 \
+        --reload-from /tmp/ckpts --reload-poll 0.5 --rounds 20
 """
 from __future__ import annotations
 
@@ -29,6 +38,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompts", nargs="*", default=["hello world"])
+    ap.add_argument("--reload-from", default=None, metavar="CKPT_DIR",
+                    help="watch this checkpoint dir and hot-swap new "
+                         "COMMITTED steps at decode-round boundaries")
+    ap.add_argument("--reload-poll", type=float, default=1.0,
+                    help="watcher poll interval in seconds")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="generation passes over the prompts (use >1 with "
+                         "--reload-from to observe live swaps)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -44,11 +61,26 @@ def main():
                                   quantize_kv=args.quant_kv))
     if eng.quant_report:
         print("[serve]", eng.quant_report.summary())
+    if args.reload_from:
+        eng.watch_checkpoints(args.reload_from, poll_s=args.reload_poll)
+        print(f"[serve] watching {args.reload_from} "
+              f"(poll {args.reload_poll}s)")
     reqs = [Request(prompt=tok.encode(p), max_new_tokens=args.max_new,
                     request_id=i) for i, p in enumerate(args.prompts)]
-    for c in eng.generate(reqs):
-        print(f"[serve] req {c.request_id}: {c.tokens} "
-              f"(prefill {c.prefill_ms:.1f} ms, decode {c.decode_ms:.1f} ms)")
+    for rnd in range(args.rounds):
+        for c in eng.generate(reqs):
+            print(f"[serve] round {rnd} req {c.request_id} "
+                  f"v{c.weights_version}: {c.tokens} "
+                  f"(prefill {c.prefill_ms:.1f} ms, decode "
+                  f"{c.decode_ms:.1f} ms, swap {c.swap_ms:.2f} ms)")
+    stats = eng.stats()
+    w = stats["weights"]
+    print(f"[serve] {stats['rounds']} rounds, weights v{w['version']} "
+          f"(source {w['source']}, {w['swaps']} swaps, "
+          f"{w['versions_built']} versions built)")
+    for err in w["errors"]:
+        print(f"[serve] reload error: {err}")
+    eng.close()
 
 
 if __name__ == "__main__":

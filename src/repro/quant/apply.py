@@ -100,6 +100,58 @@ def quantize_params_sharded(params: Any, bits: int, method: str = "squant",
     return _walk(params, (), bits, method, group_size, False)
 
 
+def is_quantized_tree(tree: Any) -> bool:
+    """True if any node carries serving-format quantized leaves."""
+    found = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w_q" in node or "w_q4" in node:
+                found.append(True)
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, list):
+            for v in node:
+                walk(v)
+
+    walk(tree)
+    return bool(found)
+
+
+def quant_tree_meta(bits: int, method: str, group_size: Optional[int],
+                    report=None, quantize_ms: Optional[float] = None) -> dict:
+    """Checkpoint metadata for a quantized serving tree: the bits/method
+    contract restore validates against, plus a ``QuantReport`` digest when
+    the tree came through ``core.pipeline.quantize_tree``."""
+    meta = {"bits": bits, "method": method, "group_size": group_size,
+            "packed_int4": bits <= 4,
+            "leaf_format": ("w_q4" if bits <= 4 else "w_q") + "+w_scale"}
+    if quantize_ms is not None:
+        meta["quantize_ms"] = quantize_ms
+    if report is not None:
+        meta["report"] = {"layers": len(report.layers),
+                          "total_ms": report.total_millis,
+                          "backend": report.backend,
+                          "mesh_size": report.mesh_size}
+    return meta
+
+
+def quantize_params_serving(params: Any, bits: int, method: str = "squant",
+                            group_size: Optional[int] = 128):
+    """``(serving_tree, quant_meta)`` — the checkpointable quantized form.
+
+    Same tree as :func:`quantize_params_sharded`, synchronized and timed so
+    the metadata records the data-free quantization cost (Table-3 protocol).
+    """
+    import time
+    t0 = time.perf_counter()
+    tree = quantize_params_sharded(params, bits, method=method,
+                                   group_size=group_size)
+    jax.block_until_ready(jax.tree_util.tree_leaves(tree))
+    ms = (time.perf_counter() - t0) * 1e3
+    return tree, quant_tree_meta(bits, method, group_size, quantize_ms=ms)
+
+
 def dequant_kernel(params: dict, dtype) -> jnp.ndarray:
     """(out, in) float kernel from a quantized param dict."""
     if "w_q4" in params:

@@ -1,2 +1,5 @@
-"""Batched serving engine with quantized-weight and quantized-KV paths."""
+"""Batched serving engine with quantized-weight and quantized-KV paths,
+backed by a versioned hot-reloadable weight store."""
 from repro.serving.engine import ServeEngine, ServeConfig  # noqa: F401
+from repro.serving.weights import (WeightStore,  # noqa: F401
+                                   WeightVersion, make_weight_pipeline)

@@ -9,9 +9,17 @@ Batching model: static continuous batch of ``max_batch`` slots. Requests are
 left-padded to a common prefill length per micro-round (simple and fully
 jittable); decode proceeds in lockstep with per-slot completion masks. Slots
 are refilled between rounds (tests exercise multi-round refills).
+
+Weight ownership lives in :class:`repro.serving.weights.WeightStore`, not
+the engine: each round starts by *acquiring* a weight version — the only
+point where a staged version can swap in — and holds that snapshot for the
+whole round, so a concurrent reload can never tear an in-flight request.
+``Completion`` reports per-round ``prefill_ms``/``decode_ms``/``swap_ms``
+and the serving ``weights_version`` so reload stalls are observable.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence
@@ -20,8 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import quantize_tree
 from repro.serving.sampling import sample
+from repro.serving.weights import WeightStore, make_weight_pipeline
 
 
 @dataclasses.dataclass
@@ -51,32 +59,61 @@ class Completion:
     tokens: List[int]
     prefill_ms: float
     decode_ms: float
+    swap_ms: float = 0.0          # round-boundary weight-swap time
+    weights_version: int = 1      # WeightStore version the round served
 
 
 class ServeEngine:
-    def __init__(self, model, params, cfg: ServeConfig):
-        self.cfg = cfg
-        self.quant_report = None
-        if cfg.quantize_weights and not cfg.dequantize_for_compute:
-            # real-quantized serving: QuantizedTensor leaves can't be scanned
-            # over — unroll the layer stack (standard for serving anyway).
-            import dataclasses as _dc
-            from repro.models.model import build_model
-            from repro.models.transformer import n_periods, unstack_stack
-            if "periods" in params.get("stack", {}):
-                params = dict(params)
-                params["stack"] = unstack_stack(params["stack"],
-                                                n_periods(model.cfg))
-            model = build_model(_dc.replace(model.cfg, scan_layers=False))
-        self.model = model
-        if cfg.quantize_weights:
-            params, self.quant_report = quantize_tree(
-                params, method=cfg.quantize_weights, bits=cfg.weight_bits,
-                dequantize=cfg.dequantize_for_compute)
-        self.params = params
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+    def __init__(self, model, params=None, cfg: ServeConfig = None, *,
+                 store: Optional[WeightStore] = None):
+        self.cfg = cfg or ServeConfig()
+        # weight preparation (scan-unroll for real-quantized serving +
+        # quantize_tree) lives in serving.weights; the engine only consumes
+        # versioned serving trees.
+        self.model, quantize_fn, prepare_fn = \
+            make_weight_pipeline(model, self.cfg)
+        if store is None:
+            if params is None:
+                raise ValueError("ServeEngine needs params or a store")
+            store = WeightStore(quantize_fn, fp_params=params,
+                                prepare_fn=prepare_fn)
+        self.store = store
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
         self._key = jax.random.PRNGKey(0)
+        self._rounds_total = 0
+        # bounded: a watch-forever server must not grow per-round state
+        self._round_log: collections.deque = collections.deque(maxlen=1024)
+
+    # ------------------------------------------------------------ weights
+    @property
+    def params(self):
+        """The live serving tree (current weight version)."""
+        return self.store.current.params
+
+    @property
+    def quant_report(self):
+        return self.store.current.report
+
+    def watch_checkpoints(self, ckpt_dir: str, poll_s: float = 1.0,
+                          mesh=None):
+        """Hot-reload: poll ``ckpt_dir`` for new COMMITTED steps and stage
+        them (quantizing fp trees on the fly, loading quantized trees
+        natively); swaps land at the next decode-round boundary."""
+        self.store.watch(ckpt_dir, poll_s=poll_s, mesh=mesh,
+                         expect={"quantize_weights": self.cfg.quantize_weights,
+                                 "weight_bits": self.cfg.weight_bits})
+
+    def stats(self) -> Dict[str, Any]:
+        """Engine + weight-store observability: per-round timing log
+        (prefill/decode/swap ms and served version; last 1024 rounds) and
+        swap/version counters."""
+        return {"rounds": self._rounds_total,
+                "round_log": list(self._round_log),
+                "weights": self.store.stats()}
+
+    def close(self):
+        self.store.close()
 
     # ------------------------------------------------------------------ api
     def generate(self, requests: Sequence[Request]) -> List[Completion]:
@@ -90,6 +127,9 @@ class ServeEngine:
 
     # ---------------------------------------------------------------- round
     def _run_round(self, reqs: List[Request]) -> List[Completion]:
+        # the ONLY swap point: in-flight rounds hold `ver` to the end
+        ver, swap_ms = self.store.acquire()
+        params = ver.params
         b = len(reqs)
         pad_b = self.cfg.max_batch
         plen = max(len(r.prompt) for r in reqs)
@@ -105,7 +145,7 @@ class ServeEngine:
                 (pad_b, max(1, plen // self.model.cfg.enc_ratio),
                  self.model.cfg.d_model), jnp.float32)
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch, cache)
+        logits, cache = self._prefill(params, batch, cache)
         jax.block_until_ready(logits)
         prefill_ms = (time.perf_counter() - t0) * 1e3
 
@@ -128,9 +168,18 @@ class ServeEngine:
             if all(done[i] for i in range(b)):
                 break
             cur = nxt[:, None]
-            logits, cache = self._decode(self.params, cur, cache)
+            logits, cache = self._decode(params, cur, cache)
         jax.block_until_ready(logits)
         decode_ms = (time.perf_counter() - t0) * 1e3
+
+        # the round ran start-to-finish on `ver`; a version staged mid-round
+        # becomes visible only to the next acquire() (asserted in tests)
+        self._rounds_total += 1
+        self._round_log.append({"version": ver.version,
+                                "prefill_ms": prefill_ms,
+                                "decode_ms": decode_ms,
+                                "swap_ms": swap_ms,
+                                "requests": b})
 
         outs = []
         for i, r in enumerate(reqs):
@@ -139,5 +188,5 @@ class ServeEngine:
             if self.cfg.eos_id >= 0 and self.cfg.eos_id in toks:
                 toks = toks[:toks.index(self.cfg.eos_id) + 1]
             outs.append(Completion(r.request_id, toks, prefill_ms,
-                                   decode_ms))
+                                   decode_ms, swap_ms, ver.version))
         return outs
