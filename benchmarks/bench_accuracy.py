@@ -22,7 +22,7 @@ import numpy as np
 from repro.core import baselines
 from repro.core.pipeline import quantize_tree
 
-from _toy import (CHANNELS, cnn_forward, texture_batch, train_cnn,
+from _toy import (CHANNELS, cnn_forward, texture_batch,
                   train_toy_lm)
 
 

@@ -1,0 +1,201 @@
+"""Serving-scheduler benchmark: round vs continuous batching.
+
+Two experiments on a mixed-length workload (short requests interleaved
+with a few long ones — the shape that static rounds serve worst, because
+every request in a round waits for the round's longest):
+
+* **throughput** — end-to-end useful tokens/s for the same workload under
+  ``scheduler="round"`` vs ``scheduler="continuous"`` (acceptance:
+  continuous ≥ 1.2x);
+* **reload dip** — a weight version is staged mid-run (a *native* serving
+  tree, so staging itself is ~free and the measurement isolates the
+  *scheduling* cost of landing a reload, complementing
+  ``bench_reload.py``'s staging-contention dip). Per-step useful-token
+  rates around the stage→swap window give each engine's decode dip and
+  swap lag: the round engine can only swap after its longest in-flight
+  request finishes, the continuous engine drains admission and force-swaps
+  after ``swap_deadline_ms``.
+
+Writes ``BENCH_serving.json`` (or ``--smoke`` scale for the CI bench
+gate, compared against the committed baseline by
+``scripts/check_bench.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving.engine import Request, ServeConfig, ServeEngine
+
+DIP_WINDOW = 6          # steps per useful-rate window
+
+
+def _swap_deadline_ms(smoke: bool) -> float:
+    """Continuous force-swap deadline for the reload bench: a handful of
+    decode steps at each scale (tiny-model steps are ~4x cheaper)."""
+    return 1.5 if smoke else 8.0
+
+
+def _model(smoke: bool):
+    cfg = get_config("granite-3-8b", reduced=True)
+    over = dict(dtype="float32")
+    if smoke:
+        over.update(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                    head_dim=16, d_ff=64, vocab=256)
+    cfg = dataclasses.replace(cfg, **over)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def mixed_workload(smoke: bool) -> List[Request]:
+    """Mostly-short requests with one long request per round-sized chunk,
+    so every static round is dominated by its longest member."""
+    n, slots = (10, 4) if smoke else (24, 8)
+    long_budget, short_budgets = (24, (3, 4, 6)) if smoke \
+        else (64, (6, 8, 10, 12))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(n):
+        budget = long_budget if i % slots == 0 \
+            else short_budgets[i % len(short_budgets)]
+        plen = int(rng.integers(3, 11))
+        prompt = [int(t) for t in rng.integers(1, 60, size=plen)]
+        reqs.append(Request(prompt=prompt, max_new_tokens=budget,
+                            request_id=i))
+    return reqs
+
+
+def _serve_cfg(scheduler: str, smoke: bool, **over) -> ServeConfig:
+    slots = 4 if smoke else 8
+    return ServeConfig(max_batch=slots, max_len=96 if smoke else 192,
+                       scheduler=scheduler, **over)
+
+
+def bench_throughput(smoke: bool = False, repeats: int = 3,
+                     report=print) -> Dict:
+    model, params = _model(smoke)
+    reqs = mixed_workload(smoke)
+    total_tokens = sum(r.max_new_tokens for r in reqs)
+    out: Dict = {"requests": len(reqs), "useful_tokens": total_tokens}
+    for scheduler in ("round", "continuous"):
+        eng = ServeEngine(model, params, _serve_cfg(scheduler, smoke))
+        eng.generate(reqs)                       # warm every jit shape
+        steps0 = eng.stats()["scheduler"]["steps"]
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            outs = eng.generate(reqs)
+            best = min(best, time.perf_counter() - t0)
+        assert sum(len(o.tokens) for o in outs) == total_tokens
+        steps = eng.stats()["scheduler"]["steps"] - steps0
+        eng.close()
+        out[scheduler] = {"tok_s": total_tokens / best,
+                          "wall_ms": best * 1e3,
+                          "steps_per_run": steps // repeats}
+        report(f"[serving] {scheduler:10s}: {out[scheduler]['tok_s']:7.0f} "
+               f"tok/s ({out[scheduler]['wall_ms']:.0f} ms, "
+               f"{out[scheduler]['steps_per_run']} steps)")
+    out["ratio"] = out["continuous"]["tok_s"] / out["round"]["tok_s"]
+    report(f"[serving] continuous/round throughput ratio: "
+           f"{out['ratio']:.2f}x")
+    return out
+
+
+def _dip_metrics(steps: List[dict], stage_idx: int,
+                 w: int = DIP_WINDOW) -> Dict:
+    """Windowed useful-token rates around the stage→swap interval."""
+    rec = [e["recorded"] for e in steps]
+    v0 = steps[0]["version"]
+    swap_idx = next((i for i, e in enumerate(steps) if e["version"] > v0),
+                    None)
+    if swap_idx is None:
+        raise RuntimeError(
+            f"swap never observed in the {len(steps)}-step log (staged at "
+            f"step {stage_idx}) — stage earlier or grow the workload")
+    steady = sum(rec[max(0, stage_idx - w):stage_idx]) \
+        / min(w, max(1, stage_idx))
+    hi = min(len(rec) - w, swap_idx + w)
+    rates = [sum(rec[i:i + w]) / w
+             for i in range(stage_idx, max(stage_idx + 1, hi))]
+    min_rate = min(rates)
+    return {"steady_rate": steady, "min_rate": min_rate,
+            "dip_pct": 100.0 * (1.0 - min_rate / steady),
+            "swap_lag_steps": swap_idx - stage_idx}
+
+
+def bench_reload_dip(smoke: bool = False, report=print) -> Dict:
+    model, params = _model(smoke)
+    params2 = model.init(jax.random.PRNGKey(1))
+    reqs = mixed_workload(smoke)
+    stage_step = 5 if smoke else 12
+    deadline = _swap_deadline_ms(smoke)
+    out: Dict = {"stage_step": stage_step, "swap_deadline_ms": deadline}
+    for scheduler in ("round", "continuous"):
+        eng = ServeEngine(model, params,
+                          _serve_cfg(scheduler, smoke,
+                                     swap_deadline_ms=deadline))
+        eng.generate(reqs)                       # warm every jit shape
+        marks: Dict = {}
+        orig_acquire = eng.store.acquire
+
+        def acquire(orig=orig_acquire, marks=marks):
+            ver, sms = orig()
+            if ver.version >= 2 and "t_swap" not in marks:
+                marks["t_swap"] = time.perf_counter()
+            return ver, sms
+
+        eng.store.acquire = acquire
+
+        def hook(info, eng=eng, marks=marks):
+            if info["step"] == marks["stage_at"] \
+                    and "t_stage" not in marks:
+                # native serving tree: staging is ~free, isolating the
+                # *scheduling* dip from bench_reload's contention dip
+                eng.store.stage(serving_params=params2, source="bench",
+                                block=True)
+                marks["t_stage"] = time.perf_counter()
+
+        eng.on_step = hook
+        marks["stage_at"] = eng.scheduler.steps_total + stage_step
+        eng.scheduler.step_log = steps = []
+        outs = eng.generate(reqs)
+        assert sum(len(o.tokens) for o in outs) \
+            == sum(r.max_new_tokens for r in reqs)
+        m = _dip_metrics(steps, stage_step)
+        m["swap_lag_ms"] = (marks["t_swap"] - marks["t_stage"]) * 1e3
+        if scheduler == "continuous":
+            m["forced_swaps"] = eng.stats()["scheduler"]["forced_swaps"]
+        eng.close()
+        out[scheduler] = m
+        report(f"[serving] reload {scheduler:10s}: steady "
+               f"{m['steady_rate']:.1f} tok/step → min {m['min_rate']:.1f} "
+               f"(dip {m['dip_pct']:.0f}%), swap lag "
+               f"{m['swap_lag_steps']} steps / {m['swap_lag_ms']:.1f} ms")
+    out["dip_advantage_pct"] = \
+        out["round"]["dip_pct"] - out["continuous"]["dip_pct"]
+    report(f"[serving] continuous reload dip is "
+           f"{out['dip_advantage_pct']:.0f} pts smaller than round")
+    return out
+
+
+def run(report=print, smoke: bool = False,
+        out_path: str = "BENCH_serving.json") -> Dict:
+    results = {"smoke": smoke,
+               "throughput": bench_throughput(smoke=smoke, report=report),
+               "reload": bench_reload_dip(smoke=smoke, report=report)}
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    report(f"[serving] wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

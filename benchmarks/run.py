@@ -8,7 +8,7 @@ import time
 
 
 TABLES = ("accuracy", "ablation", "adaround", "time", "approx_precision",
-          "kernels", "roofline", "reload")
+          "kernels", "roofline", "reload", "serving")
 
 
 def main() -> None:

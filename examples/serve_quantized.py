@@ -47,6 +47,40 @@ def live_reload_demo(model, params, tok, prompts):
           f"errors: {list(st['errors']) or 'none'}")
 
 
+def continuous_reload_demo(model, params, tok, prompts):
+    """The continuous-batching path under a live reload: a mixed-length
+    workload keeps the slot pool full (short requests retire and queued
+    ones refill mid-stream), and when a re-quantized tree is staged
+    mid-generation the scheduler drains admission and swaps at a step
+    boundary — force-swapping after ``swap_deadline_ms`` instead of
+    waiting for the longest in-flight request, the round engine's failure
+    mode."""
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=4, max_len=128,
+                                  quantize_weights="squant", weight_bits=8,
+                                  scheduler="continuous",
+                                  swap_deadline_ms=25.0))
+    reqs = [Request(prompt=tok.encode(p), max_new_tokens=6 + 10 * (i % 2),
+                    request_id=i) for i, p in enumerate(prompts * 2)]
+    new_params = model.init(jax.random.PRNGKey(1))        # "retrained"
+
+    def stage_mid_run(info):       # on decode step 5: SQuant the fresh fp
+        if info["step"] == 5 and not eng.store.staged_pending:
+            eng.store.stage(fp_params=new_params, source="retrained",
+                            block=True)
+    eng.on_step = stage_mid_run
+    outs = eng.generate(reqs)
+    eng.close()
+    vs = sorted({(o.weights_version, o.forced_swaps) for o in outs})
+    sch = eng.stats()["scheduler"]
+    print(f"[continuous] {len(outs)} completions over {sch['max_slots']} "
+          f"slots in {sch['steps']} steps (mean occupancy "
+          f"{sch['mean_occupancy']:.1f}), (version, forced) {vs}")
+    print(f"[continuous] drains {sch['drains']}, forced swaps "
+          f"{sch['forced_swaps']} — the reload landed at a step boundary "
+          f"mid-workload and queued requests refilled on the new version")
+
+
 def main():
     cfg = get_config("mixtral-8x7b", reduced=True)
     cfg = dataclasses.replace(cfg, dtype="float32", vocab=260)
@@ -78,6 +112,7 @@ def main():
         print(f"   first completion: {outs[0].tokens}")
 
     live_reload_demo(model, params, tok, prompts)
+    continuous_reload_demo(model, params, tok, prompts)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,105 @@
+"""CI bench-regression gate.
+
+Re-runs the serving-scheduler benchmark at smoke scale, plus
+``bench_reload``'s stage-latency table (fixed-size workloads), and compares
+against the committed baselines in ``benchmarks/BENCH_*.json``. Only
+scale-free metrics (throughput ratios, dip percentages, swap-lag steps) and
+fixed-size latencies are compared, and tolerances are deliberately generous
+— the gate exists to catch >2x regressions (a scheduler that stopped
+batching, a stall serializing the swap path), not wall-clock noise across
+runners. Fresh JSONs are written to ``--out-dir`` and uploaded as CI
+artifacts by the ``bench-gate`` job.
+
+Usage: PYTHONPATH=src python scripts/check_bench.py [--out-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+
+FAILURES = []
+
+
+def check(name: str, ok: bool, detail: str) -> None:
+    print(f"[bench-gate] {'PASS' if ok else 'FAIL'} {name}: {detail}")
+    if not ok:
+        FAILURES.append(f"{name}: {detail}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(REPO, "benchmarks"))
+    ap.add_argument("--out-dir", default="bench-fresh")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    import bench_reload
+    import bench_serving
+
+    fresh_serving = bench_serving.run(
+        smoke=True,
+        out_path=os.path.join(args.out_dir, "BENCH_serving.json"))
+    fresh_reload = {"stage_latency": bench_reload.bench_stage_latency()}
+    with open(os.path.join(args.out_dir, "BENCH_reload.json"), "w") as f:
+        json.dump(fresh_reload, f, indent=1)
+
+    with open(os.path.join(args.baseline_dir, "BENCH_serving.json")) as f:
+        base_serving = json.load(f)
+    with open(os.path.join(args.baseline_dir, "BENCH_reload.json")) as f:
+        base_reload = json.load(f)
+
+    # --- serving: continuous batching must still beat static rounds ------
+    # smoke-scale wall clock is noisy (tiny steps, admission dispatch
+    # overhead), so the floor is structural: continuous must stay ahead of
+    # round, capped at half the committed full-scale ratio
+    ratio, base_ratio = (fresh_serving["throughput"]["ratio"],
+                         base_serving["throughput"]["ratio"])
+    floor = min(base_ratio / 2, 1.05)
+    check("serving.throughput.ratio", ratio >= floor,
+          f"continuous/round {ratio:.2f}x (baseline {base_ratio:.2f}x, "
+          f"floor {floor:.2f}x)")
+
+    # --- serving: the reload dip advantage must survive ------------------
+    fr, fc = fresh_serving["reload"]["round"], \
+        fresh_serving["reload"]["continuous"]
+    bc = base_serving["reload"]["continuous"]
+    check("serving.reload.dip-smaller-than-round",
+          fc["dip_pct"] < fr["dip_pct"],
+          f"continuous {fc['dip_pct']:.0f}% vs round {fr['dip_pct']:.0f}%")
+    dip_cap = max(2.0 * bc["dip_pct"], 25.0)
+    check("serving.reload.dip", fc["dip_pct"] <= dip_cap,
+          f"continuous dip {fc['dip_pct']:.0f}% (cap {dip_cap:.0f}%)")
+    lag_cap = max(2 * bc["swap_lag_steps"], 6)
+    check("serving.reload.swap-lag", fc["swap_lag_steps"] <= lag_cap,
+          f"{fc['swap_lag_steps']} steps (cap {lag_cap})")
+
+    # --- reload: staging/swap latency on the fixed-size workloads --------
+    for wl in ("toy_cnn", "reduced_lm"):
+        fm, bm = fresh_reload["stage_latency"][wl], \
+            base_reload["stage_latency"][wl]
+        stage_cap = 2.0 * bm["stage_fp_quantize_ms"] + 250.0
+        check(f"reload.stage-fp.{wl}",
+              fm["stage_fp_quantize_ms"] <= stage_cap,
+              f"{fm['stage_fp_quantize_ms']:.0f} ms "
+              f"(cap {stage_cap:.0f} ms)")
+        swap_cap = max(2.0 * bm["swap_ms"], 5.0)
+        check(f"reload.swap.{wl}", fm["swap_ms"] <= swap_cap,
+              f"{fm['swap_ms']:.2f} ms (cap {swap_cap:.2f} ms)")
+
+    if FAILURES:
+        print(f"[bench-gate] {len(FAILURES)} check(s) failed:")
+        for msg in FAILURES:
+            print(f"[bench-gate]   {msg}")
+        sys.exit(1)
+    print("[bench-gate] all checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,6 @@ All are container-scale but algorithmically faithful; see
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Tuple
 
 import jax

@@ -9,11 +9,11 @@ exactly like the paper's appendix experiment. The quantizer itself
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Optional
 
 import numpy as np
 
-from repro.core.reference import FlipEvent, squant_reference
+from repro.core.reference import squant_reference
 
 
 # ---------------------------------------------------------------------------

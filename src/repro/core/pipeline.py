@@ -47,11 +47,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch import (BACKENDS, quantize_codes_batched,
+from repro.core.dispatch import (quantize_codes_batched,
                                  quantize_codes_sharded, resolve_backend,
                                  shard_rows)
 from repro.quant.qtypes import (BucketReport, LayerReport, QuantReport,
-                                QuantizedTensor, ShardReport, from_codes)
+                                ShardReport, from_codes)
 
 METHODS = ("rtn", "squant", "squant_e", "squant_ek", "squant_ec")
 

@@ -185,7 +185,6 @@ def param_sharding_rules(path: Tuple[str, ...], leaf: Any) -> Tuple:
     rank = len(shape)
     name = path[-1] if path else ""
     parent = path[-2] if len(path) >= 2 else ""
-    stacked = "periods" in path or "layers" in path
 
     def pad(spec: Tuple) -> Tuple:
         """Prepend Nones for the stack dim(s) so spec matches rank."""

@@ -12,6 +12,15 @@ data-free: the point of SQuant), quantized steps load natively:
 
     python -m repro.launch.serve --quantize squant --bits 8 \
         --reload-from /tmp/ckpts --reload-poll 0.5 --rounds 20
+
+Continuous batching (``--scheduler continuous``): a fixed pool of
+``--max-slots`` decode slots over one persistent KV cache — short requests
+retire immediately and queued ones refill mid-stream, and a staged reload
+drains admission and swaps at a step boundary (force-swap after
+``--swap-deadline-ms`` instead of waiting for the longest request):
+
+    python -m repro.launch.serve --scheduler continuous --max-slots 8 \
+        --quantize squant --bits 8 --reload-from /tmp/ckpts
 """
 from __future__ import annotations
 
@@ -37,6 +46,17 @@ def main():
     ap.add_argument("--quant-kv", action="store_true")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--scheduler", default="round",
+                    choices=["round", "continuous"],
+                    help="round: static batches, swap between rounds; "
+                         "continuous: slot pool with per-request "
+                         "admission/retirement and reload-aware drain")
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="continuous decode-slot pool size (0: --batch)")
+    ap.add_argument("--swap-deadline-ms", type=float, default=250.0,
+                    help="continuous: max ms to drain in-flight slots "
+                         "before a staged reload is force-swapped "
+                         "(negative: drain fully, never force)")
     ap.add_argument("--prompts", nargs="*", default=["hello world"])
     ap.add_argument("--reload-from", default=None, metavar="CKPT_DIR",
                     help="watch this checkpoint dir and hot-swap new "
@@ -54,11 +74,15 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     tok = ByteTokenizer()
+    deadline = None if args.swap_deadline_ms < 0 else args.swap_deadline_ms
     eng = ServeEngine(model, params,
                       ServeConfig(max_batch=args.batch, max_len=256,
                                   quantize_weights=args.quantize,
                                   weight_bits=args.bits,
-                                  quantize_kv=args.quant_kv))
+                                  quantize_kv=args.quant_kv,
+                                  scheduler=args.scheduler,
+                                  max_slots=args.max_slots,
+                                  swap_deadline_ms=deadline))
     if eng.quant_report:
         print("[serve]", eng.quant_report.summary())
     if args.reload_from:
@@ -75,9 +99,15 @@ def main():
                   f"{c.decode_ms:.1f} ms, swap {c.swap_ms:.2f} ms)")
     stats = eng.stats()
     w = stats["weights"]
-    print(f"[serve] {stats['rounds']} rounds, weights v{w['version']} "
-          f"(source {w['source']}, {w['swaps']} swaps, "
-          f"{w['versions_built']} versions built)")
+    sch = stats["scheduler"]
+    print(f"[serve] scheduler={sch['kind']} steps={sch['steps']}, "
+          f"weights v{w['version']} (source {w['source']}, "
+          f"{w['swaps']} swaps, {w['versions_built']} versions built)")
+    if sch["kind"] == "continuous":
+        print(f"[serve] slots={sch['max_slots']} admitted={sch['admitted']} "
+              f"waves={sch['waves']} drains={sch['drains']} "
+              f"forced_swaps={sch['forced_swaps']} "
+              f"mean_occupancy={sch['mean_occupancy']:.2f}")
     for err in w["errors"]:
         print(f"[serve] reload error: {err}")
     eng.close()

@@ -6,14 +6,12 @@ serving engine, the quantization pipeline, and the multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard_act, shard_logits
-from repro.models import transformer as tfm
 from repro.models.layers import init_embedding, rms_norm, init_norm
 from repro.models.transformer import (apply_encoder, apply_stack, init_cache,
                                       init_encoder, init_stack, rope_values,

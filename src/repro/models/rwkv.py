@@ -112,8 +112,9 @@ def wkv_chunked(r, k, v, logw, u, s0, chunk: int = 32,
             jnp.einsum("bhjd,bhjn->bhdn", kz, vc)
         return state, o
 
-    resh = lambda a: a.reshape(b, h, n, chunk, d).swapaxes(0, 2).swapaxes(1, 2)
-    # (n, B, H, L, D)
+    def resh(a):                                          # (n, B, H, L, D)
+        return a.reshape(b, h, n, chunk, d).swapaxes(0, 2).swapaxes(1, 2)
+
     xs = tuple(resh(a) for a in (r, k, v, logw))
     if unroll:
         os_ = []

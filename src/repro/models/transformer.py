@@ -9,7 +9,6 @@ Block kinds:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -19,10 +19,8 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.pipeline import is_quantizable
-from repro.core.squant import SQuantConfig, squant_codes
+from repro.core.squant import squant_codes
 from repro.quant.qtypes import pack_int4, qmax_for_bits
 from repro.quant.scales import compute_scale
 

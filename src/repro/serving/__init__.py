@@ -1,5 +1,9 @@
-"""Batched serving engine with quantized-weight and quantized-KV paths,
-backed by a versioned hot-reloadable weight store."""
-from repro.serving.engine import ServeEngine, ServeConfig  # noqa: F401
+"""Batched serving engine (round or continuous-batching slot scheduler)
+with quantized-weight and quantized-KV paths, backed by a versioned
+hot-reloadable weight store."""
+from repro.serving.engine import (ServeEngine, ServeConfig,  # noqa: F401
+                                  Request, Completion)
+from repro.serving.scheduler import (RoundScheduler,  # noqa: F401
+                                     ContinuousScheduler)
 from repro.serving.weights import (WeightStore,  # noqa: F401
                                    WeightVersion, make_weight_pipeline)

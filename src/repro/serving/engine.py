@@ -1,35 +1,41 @@
-"""Batched serving engine.
+"""Serving engine: a thin front over the slot schedulers.
 
 The request path SQuant enables: load fp weights → on-the-fly data-free
 quantization (sub-second, no data, no BP — the paper's "on-the-fly
 framework") → serve int8/int4 weights with dequant-on-the-fly matmuls and
 optionally int8 KV caches.
 
-Batching model: static continuous batch of ``max_batch`` slots. Requests are
-left-padded to a common prefill length per micro-round (simple and fully
-jittable); decode proceeds in lockstep with per-slot completion masks. Slots
-are refilled between rounds (tests exercise multi-round refills).
+Scheduling lives in :mod:`repro.serving.scheduler`:
+
+* ``scheduler="round"`` (default) — static rounds of up to ``max_batch``
+  left-padded requests; every request in a round waits for the longest one,
+  and weight swaps land only between rounds.
+* ``scheduler="continuous"`` — a fixed pool of ``max_slots`` decode slots
+  over one persistent KV cache: queued requests are admitted into free
+  slots at step boundaries, retire on EOS/max-tokens immediately, and a
+  staged weight reload drains admission and swaps at a step boundary
+  (force-swap after ``swap_deadline_ms``).
 
 Weight ownership lives in :class:`repro.serving.weights.WeightStore`, not
-the engine: each round starts by *acquiring* a weight version — the only
-point where a staged version can swap in — and holds that snapshot for the
-whole round, so a concurrent reload can never tear an in-flight request.
-``Completion`` reports per-round ``prefill_ms``/``decode_ms``/``swap_ms``
-and the serving ``weights_version`` so reload stalls are observable.
+the engine: schedulers *acquire* a weight version at their swap points and
+pin it per round / per slot, so a concurrent reload can never tear an
+in-flight request. ``Completion`` reports ``prefill_ms``/``decode_ms``/
+``swap_ms``, the pinned ``weights_version``, and (continuous only) how many
+deadline ``forced_swaps`` landed mid-flight.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.serving.sampling import sample
+from repro.serving.scheduler import (Completion, ContinuousScheduler,
+                                     Request, RoundScheduler, admit_rows)
 from repro.serving.weights import WeightStore, make_weight_pipeline
+
+__all__ = ["ServeConfig", "Request", "Completion", "ServeEngine"]
 
 
 @dataclasses.dataclass
@@ -44,23 +50,11 @@ class ServeConfig:
     eos_id: int = -1                          # -1: never stop early
     pad_id: int = 0
     dequantize_for_compute: bool = True       # fake-quant serve on CPU
-
-
-@dataclasses.dataclass
-class Request:
-    prompt: Sequence[int]
-    max_new_tokens: int = 16
-    request_id: int = 0
-
-
-@dataclasses.dataclass
-class Completion:
-    request_id: int
-    tokens: List[int]
-    prefill_ms: float
-    decode_ms: float
-    swap_ms: float = 0.0          # round-boundary weight-swap time
-    weights_version: int = 1      # WeightStore version the round served
+    scheduler: str = "round"                  # 'round' | 'continuous'
+    max_slots: int = 0                        # slot-pool size (0: max_batch)
+    # continuous only: max ms to drain in-flight slots before a staged
+    # weight version is force-swapped at a step boundary (None: drain fully)
+    swap_deadline_ms: Optional[float] = 250.0
 
 
 class ServeEngine:
@@ -78,12 +72,35 @@ class ServeEngine:
             store = WeightStore(quantize_fn, fp_params=params,
                                 prepare_fn=prepare_fn)
         self.store = store
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step)
+        # jit entry points with trace accounting: each counter increments
+        # only when jax traces a new shape specialization, so tests can
+        # assert same-shape rounds/steps never retrace
+        self.trace_counts: Dict[str, int] = \
+            {"prefill": 0, "decode": 0, "admit": 0}
+        self._prefill = self._jit_counted("prefill", self.model.prefill)
+        self._decode = self._jit_counted("decode", self.model.decode_step)
+        self._admit_rows = self._jit_counted("admit", admit_rows)
         self._key = jax.random.PRNGKey(0)
         self._rounds_total = 0
         # bounded: a watch-forever server must not grow per-round state
         self._round_log: collections.deque = collections.deque(maxlen=1024)
+        # optional per-step instrumentation hook (tests/benches): called
+        # with {"step", "recorded", "version", "draining", "t", ...} after
+        # each lockstep sampling step
+        self.on_step = None
+        if self.cfg.scheduler == "continuous":
+            self.scheduler = ContinuousScheduler(self)
+        elif self.cfg.scheduler == "round":
+            self.scheduler = RoundScheduler(self)
+        else:
+            raise ValueError(f"unknown scheduler {self.cfg.scheduler!r} "
+                             "(expected 'round' or 'continuous')")
+
+    def _jit_counted(self, name: str, fn):
+        def counted(*args):
+            self.trace_counts[name] += 1   # runs at trace time only
+            return fn(*args)
+        return jax.jit(counted)
 
     # ------------------------------------------------------------ weights
     @property
@@ -99,17 +116,21 @@ class ServeEngine:
                           mesh=None):
         """Hot-reload: poll ``ckpt_dir`` for new COMMITTED steps and stage
         them (quantizing fp trees on the fly, loading quantized trees
-        natively); swaps land at the next decode-round boundary."""
+        natively); swaps land at the scheduler's next swap point (round
+        boundary, or continuous drain/deadline)."""
         self.store.watch(ckpt_dir, poll_s=poll_s, mesh=mesh,
                          expect={"quantize_weights": self.cfg.quantize_weights,
                                  "weight_bits": self.cfg.weight_bits})
 
     def stats(self) -> Dict[str, Any]:
-        """Engine + weight-store observability: per-round timing log
-        (prefill/decode/swap ms and served version; last 1024 rounds) and
+        """Engine + scheduler + weight-store observability: per-round
+        timing log (round scheduler; last 1024 rounds), scheduler counters
+        (steps/admissions/drains/forced swaps), jit trace counts, and
         swap/version counters."""
         return {"rounds": self._rounds_total,
                 "round_log": list(self._round_log),
+                "scheduler": self.scheduler.stats(),
+                "trace_counts": dict(self.trace_counts),
                 "weights": self.store.stats()}
 
     def close(self):
@@ -117,76 +138,4 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ api
     def generate(self, requests: Sequence[Request]) -> List[Completion]:
-        out: List[Completion] = []
-        reqs = list(requests)
-        while reqs:
-            round_reqs = reqs[:self.cfg.max_batch]
-            reqs = reqs[self.cfg.max_batch:]
-            out.extend(self._run_round(round_reqs))
-        return out
-
-    # ---------------------------------------------------------------- round
-    def _run_round(self, reqs: List[Request]) -> List[Completion]:
-        # the ONLY swap point: in-flight rounds hold `ver` to the end
-        ver, swap_ms = self.store.acquire()
-        params = ver.params
-        b = len(reqs)
-        pad_b = self.cfg.max_batch
-        plen = max(len(r.prompt) for r in reqs)
-        tokens = np.full((pad_b, plen), self.cfg.pad_id, np.int32)
-        for i, r in enumerate(reqs):
-            tokens[i, plen - len(r.prompt):] = np.asarray(r.prompt)
-
-        cache = self.model.init_cache(pad_b, self.cfg.max_len,
-                                      quantize_kv=self.cfg.quantize_kv)
-        batch = {"tokens": jnp.asarray(tokens)}
-        if self.model.cfg.is_encdec:
-            batch["enc_frames"] = jnp.zeros(
-                (pad_b, max(1, plen // self.model.cfg.enc_ratio),
-                 self.model.cfg.d_model), jnp.float32)
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(params, batch, cache)
-        jax.block_until_ready(logits)
-        prefill_ms = (time.perf_counter() - t0) * 1e3
-
-        max_new = max(r.max_new_tokens for r in reqs)
-        produced = np.full((pad_b, max_new), self.cfg.pad_id, np.int32)
-        done = np.zeros(pad_b, bool)
-        t0 = time.perf_counter()
-        cur = None
-        for t in range(max_new):
-            self._key, sk = jax.random.split(self._key)
-            nxt = sample(logits, sk, self.cfg.temperature, self.cfg.top_k)
-            nxt_np = np.asarray(nxt)
-            for i, r in enumerate(reqs):
-                if not done[i] and t < r.max_new_tokens:
-                    produced[i, t] = nxt_np[i]
-                    if nxt_np[i] == self.cfg.eos_id:
-                        done[i] = True
-                else:
-                    done[i] = done[i] or t >= r.max_new_tokens
-            if all(done[i] for i in range(b)):
-                break
-            cur = nxt[:, None]
-            logits, cache = self._decode(params, cur, cache)
-        jax.block_until_ready(logits)
-        decode_ms = (time.perf_counter() - t0) * 1e3
-
-        # the round ran start-to-finish on `ver`; a version staged mid-round
-        # becomes visible only to the next acquire() (asserted in tests)
-        self._rounds_total += 1
-        self._round_log.append({"version": ver.version,
-                                "prefill_ms": prefill_ms,
-                                "decode_ms": decode_ms,
-                                "swap_ms": swap_ms,
-                                "requests": b})
-
-        outs = []
-        for i, r in enumerate(reqs):
-            toks = [int(x) for x in produced[i, :r.max_new_tokens]]
-            # truncate at EOS
-            if self.cfg.eos_id >= 0 and self.cfg.eos_id in toks:
-                toks = toks[:toks.index(self.cfg.eos_id) + 1]
-            outs.append(Completion(r.request_id, toks, prefill_ms,
-                                   decode_ms, swap_ms, ver.version))
-        return outs
+        return self.scheduler.run(list(requests))

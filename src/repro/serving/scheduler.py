@@ -1,0 +1,468 @@
+"""Slot schedulers for the serving engine: the static round scheduler and
+the reload-aware continuous-batching scheduler.
+
+Scheduling model
+----------------
+Model caches keep ONE scalar decode position (``cache["pos"]``) for the
+whole batch, so every sequence in a batch decodes in lockstep at a shared
+clock. Both schedulers build on that invariant:
+
+* :class:`RoundScheduler` — the original static batching: requests are
+  grouped into rounds of up to ``max_batch``, left-padded to the round's
+  longest prompt, and decoded in lockstep until every request in the round
+  finishes. Prefill/cache/decode are sized to the *actual* round batch
+  (padding rows to ``max_batch`` bought nothing: every serving op is
+  row-independent, so jit retraces happen per distinct batch size either
+  way, and smaller rounds now allocate proportionally smaller KV caches —
+  asserted retrace-free across same-shape rounds in tests).
+
+* :class:`ContinuousScheduler` — a fixed pool of ``max_slots`` decode slots
+  backed by ONE persistent KV cache (slot = cache row). Queued requests are
+  admitted into free slots at step boundaries by left-padding the prompt to
+  the current clock ``P`` (prompt occupies positions ``P-L..P-1`` — exactly
+  the round engine's left-padding semantics, applied per slot instead of
+  per round); the admission prefill runs on a small side cache whose rows
+  are scattered into the pool. Slots retire on EOS/max-tokens immediately,
+  so short requests never wait on long ones. Because every serving op is
+  row-independent, a slot's greedy tokens are bit-identical to what the
+  round engine would produce for the same request at the same padding
+  (``tests/test_scheduler.py``).
+
+Reload-awareness (the point): when the :class:`~repro.serving.weights.
+WeightStore` reports a fully-staged version, the continuous scheduler stops
+admitting, drains in-flight slots, and performs the atomic swap at a step
+boundary — or force-swaps after ``swap_deadline_ms`` of draining, in which
+case in-flight slots finish on the new weights (their KV cache remains
+valid: it holds activations, not weight state, and ``Completion.
+forced_swaps`` records the event). Admission then resumes (refill). The
+round engine can swap only between rounds, i.e. after its *longest*
+in-flight request finishes — the decode-dip ``benchmarks/bench_serving.py``
+measures.
+
+Clock horizon: a slot admitted at clock ``P`` with budget ``m`` writes KV
+up to position ``P+m-1``, so admission requires ``P + m <= max_len``. The
+clock resets to 0 whenever the pool empties (a fresh wave re-uses the pool
+cache; rows at/after the new clock are masked by position, rows before it
+are rewritten by the wave's prefill).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    request_id: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: List[int]
+    prefill_ms: float
+    decode_ms: float
+    swap_ms: float = 0.0          # weight-swap time observed by this request
+    weights_version: int = 1      # WeightStore version pinned at admission
+    forced_swaps: int = 0         # deadline force-swaps that landed in flight
+
+
+def admit_rows(pool, tmp, pool_logits, tmp_logits, idx):
+    """Scatter a ``k``-row prefill cache + its last-token logits into the
+    ``max_slots``-row pool at slot indices ``idx``.
+
+    Cache leaves are batch-leading except scan-stacked period caches
+    (``(periods, batch, ...)`` — batch at axis 1) and the scalar ``pos``,
+    which the admission prefill computed for the new clock and which simply
+    replaces the pool's (both equal the clock while slots are in flight; on
+    a fresh wave it rewinds the pool).
+    """
+    out = dict(pool)
+
+    def rows0(a, b):
+        return a.at[idx].set(b.astype(a.dtype))
+
+    def rows1(a, b):
+        return a.at[:, idx].set(b.astype(a.dtype))
+
+    for key in pool:
+        if key == "pos":
+            continue
+        out[key] = jax.tree_util.tree_map(
+            rows1 if key == "periods" else rows0, pool[key], tmp[key])
+    out["pos"] = tmp["pos"]
+    return out, pool_logits.at[idx].set(tmp_logits.astype(pool_logits.dtype))
+
+
+@dataclasses.dataclass
+class _Slot:
+    order: int                    # index into the run()'s request list
+    req: Request
+    version: int                  # weight version pinned at admission
+    clock0: int                   # clock (= padded prompt length) at admission
+    t0: float                     # perf_counter right after admission prefill
+    prefill_ms: float
+    swap_ms: float = 0.0
+    forced_swaps: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+class _SchedulerBase:
+    def __init__(self, engine):
+        self.eng = engine
+        self.cfg = engine.cfg
+        self.model = engine.model
+        self.store = engine.store
+        self.steps_total = 0
+
+    def _emit_step(self, info: Dict[str, Any]) -> None:
+        step_log = getattr(self, "step_log", None)
+        if step_log is not None:
+            step_log.append(info)
+        if self.eng.on_step is not None:
+            self.eng.on_step(info)
+
+    def _validate(self, req: Request) -> None:
+        """Both schedulers share one cache horizon: a request needs
+        ``len(prompt) + max_new_tokens`` positions. Oversized requests
+        would otherwise clamp ``dynamic_update_slice`` writes onto the
+        last cache row and silently corrupt decode."""
+        n_prompt = len(req.prompt)
+        if n_prompt + req.max_new_tokens > self.cfg.max_len:
+            raise ValueError(
+                f"request {req.request_id}: prompt ({n_prompt}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_len ({self.cfg.max_len})")
+
+
+# ---------------------------------------------------------------------------
+# round scheduler (static batching)
+# ---------------------------------------------------------------------------
+
+class RoundScheduler(_SchedulerBase):
+    """Static batching: FCFS rounds of up to ``max_batch``; a round ends
+    only when its longest request does. Swaps land between rounds."""
+
+    name = "round"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.step_log: Optional[List[Dict[str, Any]]] = None
+
+    def run(self, requests: List[Request]) -> List[Completion]:
+        out: List[Completion] = []
+        reqs = list(requests)
+        for r in reqs:
+            self._validate(r)
+        while reqs:
+            out.extend(self._run_round(reqs[:self.cfg.max_batch]))
+            reqs = reqs[self.cfg.max_batch:]
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        return {"kind": self.name, "steps": self.steps_total,
+                "rounds": self.eng._rounds_total}
+
+    def _run_round(self, reqs: List[Request]) -> List[Completion]:
+        cfg = self.cfg
+        # the ONLY swap point: in-flight rounds hold `ver` to the end
+        ver, swap_ms = self.store.acquire()
+        params = ver.params
+        # sized to the actual round: a 2-request round on an 8-slot config
+        # allocates a 2-row cache. Trade-off vs the old pad-to-max_batch
+        # loop: rounds of the same (b, plen) shape never retrace (asserted
+        # in tests via engine.trace_counts), but each NEW partial-round
+        # size compiles its own decode trace — submit full rounds (or use
+        # the continuous scheduler, whose decode shape is fixed at
+        # max_slots) when that latency matters more than cache memory.
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        tokens = np.full((b, plen), cfg.pad_id, np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, plen - len(r.prompt):] = np.asarray(r.prompt)
+
+        cache = self.model.init_cache(b, cfg.max_len,
+                                      quantize_kv=cfg.quantize_kv)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.model.cfg.is_encdec:
+            batch["enc_frames"] = jnp.zeros(
+                (b, max(1, plen // self.model.cfg.enc_ratio),
+                 self.model.cfg.d_model), jnp.float32)
+        t0 = time.perf_counter()
+        logits, cache = self.eng._prefill(params, batch, cache)
+        jax.block_until_ready(logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        produced = np.full((b, max_new), cfg.pad_id, np.int32)
+        done = np.zeros(b, bool)
+        t0 = time.perf_counter()
+        for t in range(max_new):
+            self.eng._key, sk = jax.random.split(self.eng._key)
+            nxt = sample(logits, sk, cfg.temperature, cfg.top_k)
+            nxt_np = np.asarray(nxt)
+            recorded = 0
+            for i, r in enumerate(reqs):
+                if not done[i] and t < r.max_new_tokens:
+                    produced[i, t] = nxt_np[i]
+                    recorded += 1
+                    if nxt_np[i] == cfg.eos_id:
+                        done[i] = True
+                else:
+                    done[i] = done[i] or t >= r.max_new_tokens
+            self.steps_total += 1
+            self._emit_step({"step": self.steps_total, "recorded": recorded,
+                             "version": ver.version, "draining": False,
+                             "t": time.perf_counter()})
+            if all(done[i] for i in range(b)):
+                break
+            logits, cache = self.eng._decode(params, nxt[:, None], cache)
+        jax.block_until_ready(logits)
+        decode_ms = (time.perf_counter() - t0) * 1e3
+
+        # the round ran start-to-finish on `ver`; a version staged mid-round
+        # becomes visible only to the next acquire() (asserted in tests)
+        self.eng._rounds_total += 1
+        self.eng._round_log.append({"version": ver.version,
+                                    "prefill_ms": prefill_ms,
+                                    "decode_ms": decode_ms,
+                                    "swap_ms": swap_ms,
+                                    "requests": b})
+
+        outs = []
+        for i, r in enumerate(reqs):
+            toks = [int(x) for x in produced[i, :r.max_new_tokens]]
+            # truncate at EOS
+            if cfg.eos_id >= 0 and cfg.eos_id in toks:
+                toks = toks[:toks.index(cfg.eos_id) + 1]
+            outs.append(Completion(r.request_id, toks, prefill_ms,
+                                   decode_ms, swap_ms, ver.version))
+        return outs
+
+
+# ---------------------------------------------------------------------------
+# continuous scheduler (slot pool + reload-aware drain/refill)
+# ---------------------------------------------------------------------------
+
+class ContinuousScheduler(_SchedulerBase):
+    """Continuous batching over a fixed slot pool with one persistent KV
+    cache; admission at step boundaries, per-slot retirement, and
+    drain-then-swap (deadline-bounded) around weight reloads."""
+
+    name = "continuous"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        if self.model.cfg.is_encdec:
+            raise NotImplementedError(
+                "continuous scheduler does not support encoder-decoder "
+                "models yet (per-slot encoder outputs have admission-"
+                "dependent lengths); use scheduler='round'")
+        self.max_slots = self.cfg.max_slots or self.cfg.max_batch
+        self.slots: List[Optional[_Slot]] = [None] * self.max_slots
+        self._cache = None            # persistent pool cache (lazy init)
+        self._logits = None           # (max_slots, vocab) pending logits
+        self._pending_swap_ms = 0.0   # swap time to attribute at admission
+        # observability
+        self.admitted = 0
+        self.retired = 0
+        self.drains = 0
+        self.forced_swaps = 0
+        self.waves = 0
+        self.occupancy_sum = 0
+        self.max_occupancy = 0
+        self.step_log: Optional[List[Dict[str, Any]]] = None
+        # bounded: one entry per admission, observable padding/version
+        self.admission_log: collections.deque = \
+            collections.deque(maxlen=1024)
+
+    # ------------------------------------------------------------------ api
+    def run(self, requests: List[Request]) -> List[Completion]:
+        cfg = self.cfg
+        results: List[Optional[Completion]] = [None] * len(requests)
+        queue: "collections.deque[Tuple[int, Request]]" = collections.deque()
+        ver, swap_ms = self.store.acquire()
+        params = ver.params
+        self._pending_swap_ms += swap_ms
+        for i, r in enumerate(requests):
+            self._validate(r)
+            if r.max_new_tokens <= 0:
+                results[i] = Completion(r.request_id, [], 0.0, 0.0, 0.0,
+                                        ver.version)
+                continue
+            queue.append((i, r))
+        clock = 0
+        drain_t0 = None
+
+        while queue or any(s is not None for s in self.slots):
+            active_ids = [i for i, s in enumerate(self.slots)
+                          if s is not None]
+            # ---- reload-awareness: drain, then swap at a step boundary ----
+            staged = self.store.staged_info()
+            if staged is not None:
+                if drain_t0 is None:
+                    drain_t0 = time.perf_counter()
+                    self.drains += 1
+                    self.store.note_drain(len(active_ids))
+                elapsed_ms = (time.perf_counter() - drain_t0) * 1e3
+                deadline = cfg.swap_deadline_ms
+                # the deadline clock starts when the version finished
+                # staging (store-side), not when this loop first saw it —
+                # a version staged between generate() calls swaps at once
+                if not active_ids or (deadline is not None
+                                      and staged["age_ms"] >= deadline):
+                    forced = bool(active_ids)
+                    ver, sms = self.store.acquire()
+                    params = ver.params
+                    self.store.note_swap(forced=forced, drain_ms=elapsed_ms)
+                    self._pending_swap_ms += sms
+                    if forced:
+                        self.forced_swaps += 1
+                        for i in active_ids:
+                            self.slots[i].forced_swaps += 1
+                            self.slots[i].swap_ms += sms
+                    drain_t0 = None
+            draining = self.store.staged_pending
+
+            # ---- admission into free slots (paused while draining) ----
+            free_ids = [i for i, s in enumerate(self.slots) if s is None]
+            if queue and free_ids and not draining:
+                fresh = len(free_ids) == self.max_slots
+                chosen, new_clock = self._pick(queue, clock,
+                                               len(free_ids), fresh)
+                if chosen:
+                    if fresh:
+                        self.waves += 1
+                    clock = new_clock
+                    self._admit(chosen, free_ids, clock, params, ver.version)
+
+            active_ids = [i for i, s in enumerate(self.slots)
+                          if s is not None]
+            if not active_ids:
+                # only reachable while draining paused admission with an
+                # empty pool; the swap branch fires on the next iteration
+                continue
+
+            # ---- one lockstep step: sample at `clock`, retire, decode ----
+            self.eng._key, sk = jax.random.split(self.eng._key)
+            nxt = sample(self._logits, sk, cfg.temperature, cfg.top_k)
+            nxt_np = np.asarray(nxt)
+            recorded = 0
+            t_now = time.perf_counter()
+            for i in active_ids:
+                s = self.slots[i]
+                tok = int(nxt_np[i])
+                s.tokens.append(tok)
+                recorded += 1
+                if (len(s.tokens) >= s.req.max_new_tokens
+                        or (cfg.eos_id >= 0 and tok == cfg.eos_id)):
+                    results[s.order] = Completion(
+                        s.req.request_id, s.tokens, s.prefill_ms,
+                        (t_now - s.t0) * 1e3, s.swap_ms, s.version,
+                        s.forced_swaps)
+                    self.slots[i] = None
+                    self.retired += 1
+            self.steps_total += 1
+            self.occupancy_sum += recorded
+            self.max_occupancy = max(self.max_occupancy, recorded)
+            self._emit_step({"step": self.steps_total, "clock": clock,
+                             "recorded": recorded, "version": ver.version,
+                             "draining": draining, "t": t_now})
+            if any(s is not None for s in self.slots):
+                self._logits, self._cache = self.eng._decode(
+                    params, nxt[:, None], self._cache)
+                clock += 1
+        return results  # type: ignore[return-value]
+
+    def stats(self) -> Dict[str, Any]:
+        return {"kind": self.name, "max_slots": self.max_slots,
+                "steps": self.steps_total, "admitted": self.admitted,
+                "retired": self.retired, "waves": self.waves,
+                "drains": self.drains, "forced_swaps": self.forced_swaps,
+                "mean_occupancy": (self.occupancy_sum / self.steps_total
+                                   if self.steps_total else 0.0),
+                "max_occupancy": self.max_occupancy}
+
+    # ------------------------------------------------------------ internals
+    def _pick(self, queue, clock: int, nfree: int, fresh: bool):
+        """Choose up to ``nfree`` queued requests admissible at the clock.
+
+        Mid-flight (``fresh=False``): FCFS with skip — a request fits iff
+        its prompt fits under the clock (``L <= clock``; the clock advances
+        one position per step, so longer prompts become admissible soon)
+        and its budget fits the cache horizon.
+
+        Fresh wave (``fresh=True``): the pool is empty, so the clock
+        restarts at the wave's longest admitted prompt. The queue head is
+        always admitted (its own ``L + max_new <= max_len`` was validated
+        at submit), guaranteeing progress; growing the wave re-checks every
+        already-chosen request against the raised clock so admission never
+        invalidates an earlier choice.
+        """
+        max_len = self.cfg.max_len
+        chosen: List[Tuple[int, Request]] = []
+        new_clock = 0 if fresh else clock
+        for item in list(queue):
+            if len(chosen) >= nfree:
+                break
+            _, r = item
+            if fresh:
+                cand = max(new_clock, len(r.prompt))
+                if (cand + r.max_new_tokens <= max_len
+                        and all(cand + c.max_new_tokens <= max_len
+                                for _, c in chosen)):
+                    chosen.append(item)
+                    new_clock = cand
+            else:
+                if (len(r.prompt) <= clock
+                        and clock + r.max_new_tokens <= max_len):
+                    chosen.append(item)
+        for item in chosen:
+            queue.remove(item)
+        return chosen, new_clock
+
+    def _admit(self, chosen, free_ids, clock: int, params, version: int):
+        """Prefill ``chosen`` left-padded to ``clock`` on a side cache and
+        scatter the rows into the pool at the first ``len(chosen)`` free
+        slots."""
+        cfg = self.cfg
+        k = len(chosen)
+        tokens = np.full((k, clock), cfg.pad_id, np.int32)
+        for j, (_, r) in enumerate(chosen):
+            tokens[j, clock - len(r.prompt):] = np.asarray(r.prompt)
+        tmp_cache = self.model.init_cache(k, cfg.max_len,
+                                          quantize_kv=cfg.quantize_kv)
+        t0 = time.perf_counter()
+        lg, tmp_cache = self.eng._prefill(
+            params, {"tokens": jnp.asarray(tokens)}, tmp_cache)
+        if self._cache is None:
+            self._cache = self.model.init_cache(
+                self.max_slots, cfg.max_len, quantize_kv=cfg.quantize_kv)
+            self._logits = jnp.zeros((self.max_slots, lg.shape[-1]),
+                                     lg.dtype)
+        idx = jnp.asarray(np.asarray(free_ids[:k], np.int32))
+        self._cache, self._logits = self.eng._admit_rows(
+            self._cache, tmp_cache, self._logits, lg, idx)
+        jax.block_until_ready(self._logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+        t_now = time.perf_counter()
+        for j, (order, r) in enumerate(chosen):
+            self.slots[free_ids[j]] = _Slot(
+                order=order, req=r, version=version, clock0=clock,
+                t0=t_now, prefill_ms=prefill_ms,
+                swap_ms=self._pending_swap_ms)
+            self.admission_log.append(
+                {"request_id": r.request_id, "slot": free_ids[j],
+                 "clock": clock, "version": version})
+        self._pending_swap_ms = 0.0
+        self.admitted += k

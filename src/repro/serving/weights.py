@@ -13,9 +13,13 @@ Model
   rounds currently read) and at most one **staged** version (fully built,
   device-resident, waiting to be swapped in). Staging happens on a
   background worker (latest request wins); the swap itself is a pointer
-  flip the engine performs only at decode-round boundaries via
-  :meth:`WeightStore.acquire`, so an in-flight round can never observe a
-  torn tree — it holds the ``WeightVersion`` it started with.
+  flip a scheduler performs only at its swap points via
+  :meth:`WeightStore.acquire` — round boundaries for the round scheduler,
+  drained (or deadline-forced) step boundaries for the continuous one —
+  so an in-flight round can never observe a torn tree: it holds the
+  ``WeightVersion`` it started with. Schedulers watch
+  :attr:`WeightStore.staged_pending` to begin draining and report the
+  drain/swap through :meth:`note_drain`/:meth:`note_swap`.
 * ``watch()`` — a poll thread over a checkpoint directory
   (``checkpoint.Checkpointer`` layout). New COMMITTED steps are restored
   (torn/corrupt step dirs are skipped), validated against the serve
@@ -114,7 +118,13 @@ class WeightStore:
         self._watch_thread: Optional[threading.Thread] = None
         self._last_ckpt_step = -1
         self._ckpt_retries = 0            # transient-failure retries per step
+        self._staged_at = 0.0             # monotonic time of last staging
         self.swap_count = 0
+        # reload-aware scheduler observability (note_drain/note_swap)
+        self.drain_count = 0
+        self.forced_swap_count = 0
+        self.last_drain_ms = 0.0
+        self.last_drain_in_flight = 0
         # bounded: a persistently failing watcher (e.g. deleted ckpt dir)
         # appends per poll and must not grow a long-lived server's memory
         self.errors: collections.deque = collections.deque(maxlen=256)
@@ -133,6 +143,39 @@ class WeightStore:
     @property
     def version(self) -> int:
         return self.current.version
+
+    @property
+    def staged_pending(self) -> bool:
+        """True when a fully-built version is waiting to be swapped in —
+        the reload-aware scheduler's drain trigger (peek; no swap)."""
+        with self._lock:
+            return self._staged is not None
+
+    def staged_info(self) -> Optional[Dict[str, Any]]:
+        """``{"version", "age_ms"}`` of the staged version, or None.
+        ``age_ms`` is how long the version has been waiting — schedulers
+        compare it against their swap deadline."""
+        with self._lock:
+            if self._staged is None:
+                return None
+            return {"version": self._staged.version,
+                    "age_ms": (time.monotonic() - self._staged_at) * 1e3}
+
+    # ------------------------------------------------- scheduler drain hooks
+    def note_drain(self, in_flight: int = 0) -> None:
+        """A scheduler observed the staged version and began draining
+        (stopped admitting) with ``in_flight`` slots still decoding."""
+        with self._lock:
+            self.drain_count += 1
+            self.last_drain_in_flight = in_flight
+
+    def note_swap(self, forced: bool = False, drain_ms: float = 0.0) -> None:
+        """A scheduler swapped after draining for ``drain_ms``; ``forced``
+        means the swap-deadline expired with slots still in flight."""
+        with self._lock:
+            if forced:
+                self.forced_swap_count += 1
+            self.last_drain_ms = drain_ms
 
     def acquire(self) -> Tuple[WeightVersion, float]:
         """Swap in any fully-staged version and return ``(live, swap_ms)``.
@@ -156,7 +199,13 @@ class WeightStore:
                     "step": live.step, "staged_ms": live.staged_ms,
                     "versions_built": self._counter,
                     "swaps": self.swap_count,
+                    "drains": self.drain_count,
+                    "forced_swaps": self.forced_swap_count,
+                    "last_drain_ms": self.last_drain_ms,
+                    "last_drain_in_flight": self.last_drain_in_flight,
                     "staged_pending": staged is not None,
+                    "staged_version":
+                        staged.version if staged is not None else None,
                     "watching": self._watch_thread is not None,
                     "errors": list(self.errors)}
 
@@ -178,6 +227,7 @@ class WeightStore:
             self._counter += 1
             self._staged = WeightVersion(self._counter, tree, rep, source,
                                          step, staged_ms)
+            self._staged_at = time.monotonic()
 
     def stage(self, fp_params: Any = None, *, serving_params: Any = None,
               report: Optional[QuantReport] = None, source: str = "manual",

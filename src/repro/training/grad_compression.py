@@ -16,12 +16,10 @@ sums them across pods in R-1 ppermute hops of int8 payloads.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 BLOCK = 2048  # error-feedback / scale block size (f32 overhead: 1/2048)
 

@@ -29,7 +29,8 @@ class AdamWConfig:
 
 
 def adamw_init(params: Any) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree_util.tree_map(zeros, params),
             "v": jax.tree_util.tree_map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

@@ -14,7 +14,6 @@ monitor hook.
 from __future__ import annotations
 
 import dataclasses
-import os
 import signal
 import time
 from typing import Any, Callable, Dict, Optional, Tuple

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import baselines
-from repro.quant.scales import compute_scale, mse_scale
+from repro.quant.scales import compute_scale
 
 
 def test_rtn_matches_manual(rng):

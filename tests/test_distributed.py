@@ -7,7 +7,6 @@ the same scripts run on jax 0.4.x and on the newer axis-typed API.
 """
 import textwrap
 
-import pytest
 
 
 def test_param_sharding_rules(multidevice_run):

@@ -7,7 +7,7 @@ import pytest
 from repro.core.squant import SQuantConfig, squant
 from repro.kernels import ops, ref
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
-from repro.quant.qtypes import from_codes, pack_int4
+from repro.quant.qtypes import pack_int4
 
 
 def _quant(rng, m, n, bits, group_scales=False, group_size=32):

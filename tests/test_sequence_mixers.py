@@ -31,7 +31,9 @@ def test_wkv_chunked_equals_scan(rng, chunk):
 def test_wkv_state_carries_across_calls(rng):
     """Processing [a; b] equals processing a then b with the carried state."""
     b, h, s, d = 1, 2, 32, 8
-    mk = lambda: jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32)) * 0.5
+    def mk():
+        return jnp.asarray(
+            rng.normal(size=(b, h, s, d)).astype(np.float32)) * 0.5
     r, k, v = mk(), mk(), mk()
     logw = jnp.clip(mk() - 1.0, -2.0, -1e-4)
     u = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32) * 0.1)

@@ -1,7 +1,6 @@
 """Training runtime tests: optimizer, microbatching, learning on a
 low-entropy stream, checkpoint/restart fault tolerance, straggler monitor."""
 import os
-import signal
 import subprocess
 import sys
 import tempfile

@@ -8,14 +8,12 @@ torn/corrupt step dirs skipped, metadata mismatches rejected), and a live
 multi-round reload with zero failed requests.
 """
 import dataclasses
-import json
 import os
 import threading
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
