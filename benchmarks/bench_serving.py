@@ -14,7 +14,14 @@ every request in a round waits for the round's longest):
   rates around the stage→swap window give each engine's decode dip and
   swap lag: the round engine can only swap after its longest in-flight
   request finishes, the continuous engine drains admission and force-swaps
-  after ``swap_deadline_ms``.
+  after ``swap_deadline_ms``;
+* **prefill tail** — resident slots decode long budgets while long-prompt
+  requests are admitted mid-flight. Monolithic admission stalls every
+  resident for the full prefill (the p99 decode step-time spike);
+  ``prefill_chunk`` consumes the same prompt a bounded chunk per step.
+  Both paths pad the long prompts to the same clock, so their greedy
+  tokens must be bit-identical (verified) — the chunked path buys its
+  p50/p95/p99 step-time profile for free.
 
 Writes ``BENCH_serving.json`` (or ``--smoke`` scale for the CI bench
 gate, compared against the committed baseline by
@@ -23,6 +30,7 @@ gate, compared against the committed baseline by
 from __future__ import annotations
 
 import dataclasses
+import gc
 import json
 import sys
 import time
@@ -186,11 +194,137 @@ def bench_reload_dip(smoke: bool = False, report=print) -> Dict:
     return out
 
 
+def _tail_model():
+    """A wider LM for the prefill-tail experiment: at toy widths both
+    prefill and decode are pure dispatch overhead, so the admission spike
+    chunking bounds would be invisible. This width makes a long-prompt
+    prefill FLOPs-bound (~2-4x a decode step) while a single chunk stays
+    well under one."""
+    cfg = get_config("granite-3-8b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32", d_model=384, d_ff=1024,
+                              n_heads=4, n_kv_heads=2, head_dim=64,
+                              vocab=512)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def long_prompt_workload(smoke: bool):
+    """Three background residents with 240-token prompts (the pool clock
+    starts deep, so every later admission pays a long prefill) decode while
+    a cycle slot serves one short request and then a sequence of ever-longer
+    long-prompt requests admitted mid-flight. Each long prompt length is
+    derived from the scheduler's own catch-up recurrence, so the chunked
+    path's committed completion clock lands exactly on the prompt length —
+    which is also the first clock the monolithic path can admit it at:
+    identical padding in both paths, hence bit-identical greedy tokens.
+    Admission spikes are ~4% of steps, putting p99 squarely on them.
+    Fixed-size at every scale (like ``bench_reload``'s latency table): the
+    spike is a function of prompt length, so shrinking it would measure
+    nothing."""
+    del smoke
+    max_len, chunk = 384, 16
+    wave_clock, cycle_budget, long_budget = 240, 4, 6
+    # the scheduler's mid-flight commit: admitted at clock C0, a pending
+    # needs s = ceil((C0-1)/(chunk-1)) steps to catch the moving clock, so
+    # a prompt of exactly C0+s-1 tokens completes at its own length
+    long_lens = []
+    c0 = wave_clock + cycle_budget
+    while True:
+        ln = c0 + max(1, -(-(c0 - 1) // (chunk - 1))) - 1
+        if ln + long_budget > max_len:
+            break
+        long_lens.append(ln)
+        c0 = ln + long_budget
+    rng = np.random.default_rng(7)
+    reqs = [Request(prompt=[int(t) for t in
+                            rng.integers(1, 500, size=wave_clock)],
+                    max_new_tokens=long_lens[-1] + long_budget - wave_clock,
+                    request_id=i)
+            for i in range(3)]
+    reqs.append(Request(prompt=[int(t) for t in rng.integers(1, 500,
+                                                             size=3)],
+                        max_new_tokens=cycle_budget, request_id=3))
+    for j, ln in enumerate(long_lens):
+        reqs.append(Request(
+            prompt=[int(t) for t in rng.integers(1, 500, size=ln)],
+            max_new_tokens=long_budget, request_id=4 + j))
+    return reqs, max_len, chunk
+
+
+def bench_prefill_tail(smoke: bool = False, repeats: int = 6,
+                       report=print) -> Dict:
+    # always the FLOPs-bound width and the fixed-size workload — `smoke`
+    # is accepted for signature parity with the other experiments but
+    # changes nothing (a shrunken spike would measure nothing)
+    model, params = _tail_model()
+    reqs, max_len, chunk = long_prompt_workload(smoke)
+    out: Dict = {"requests": len(reqs), "prefill_chunk": chunk,
+                 "long_prompt_lens": [len(r.prompt) for r in reqs[4:]]}
+    tokens: Dict[str, List] = {}
+    clocks: Dict[str, List[int]] = {}
+    for label, c in (("monolithic", 0), ("chunked", chunk)):
+        eng = ServeEngine(model, params,
+                          ServeConfig(max_batch=4, max_len=max_len,
+                                      scheduler="continuous",
+                                      prefill_chunk=c))
+        eng.generate(reqs)                   # warm every jit shape
+        # the schedule is deterministic, so repeated runs visit the same
+        # per-step work: the elementwise min strips container stalls
+        # (thread-pool hiccups) that would otherwise own the tail. GC is
+        # paused outright — its pauses trigger at allocation counts, which
+        # recur at the SAME step every repeat, so min-of-N can't strip them
+        per_run = []
+        gc.collect()
+        gc.disable()
+        try:
+            for _ in range(repeats):
+                eng.scheduler.step_log = steps = []
+                outs = eng.generate(reqs)
+                per_run.append([e["step_ms"] for e in steps])
+        finally:
+            gc.enable()
+        assert len({len(r) for r in per_run}) == 1
+        ms = np.asarray(per_run, np.float64).min(axis=0)
+        tokens[label] = [o.tokens for o in outs]
+        clocks[label] = [e["clock"] for e in eng.scheduler.admission_log
+                         if e["request_id"] >= 4][-len(reqs[4:]):]
+        out[label] = {
+            "steps": int(ms.size),
+            "p50_ms": float(np.percentile(ms, 50)),
+            "p95_ms": float(np.percentile(ms, 95)),
+            "p99_ms": float(np.percentile(ms, 99)),
+            "max_ms": float(ms.max()),
+        }
+        if c:
+            out[label]["chunk_steps"] = \
+                eng.stats()["scheduler"]["chunk_steps"] // (repeats + 1)
+        eng.close()
+        m = out[label]
+        report(f"[serving] prefill-tail {label:10s}: step-time p50 "
+               f"{m['p50_ms']:6.2f} / p95 {m['p95_ms']:6.2f} / p99 "
+               f"{m['p99_ms']:6.2f} / max {m['max_ms']:6.2f} ms "
+               f"({m['steps']} steps)")
+    out["tokens_identical"] = tokens["monolithic"] == tokens["chunked"]
+    out["admission_clocks_identical"] = \
+        clocks["monolithic"] == clocks["chunked"]
+    if not out["tokens_identical"]:
+        raise RuntimeError(
+            "chunked prefill diverged from the monolithic path: greedy "
+            f"tokens differ (admission clocks {clocks['monolithic']} vs "
+            f"{clocks['chunked']}) — the equivalence guarantee is broken")
+    out["p99_ratio"] = out["chunked"]["p99_ms"] / out["monolithic"]["p99_ms"]
+    report(f"[serving] prefill-tail chunked/monolithic p99 ratio: "
+           f"{out['p99_ratio']:.2f}x (tokens bit-identical)")
+    return out
+
+
 def run(report=print, smoke: bool = False,
         out_path: str = "BENCH_serving.json") -> Dict:
     results = {"smoke": smoke,
                "throughput": bench_throughput(smoke=smoke, report=report),
-               "reload": bench_reload_dip(smoke=smoke, report=report)}
+               "reload": bench_reload_dip(smoke=smoke, report=report),
+               "prefill_tail": bench_prefill_tail(smoke=smoke,
+                                                  report=report)}
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
     report(f"[serving] wrote {out_path}")

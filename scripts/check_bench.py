@@ -3,12 +3,18 @@
 Re-runs the serving-scheduler benchmark at smoke scale, plus
 ``bench_reload``'s stage-latency table (fixed-size workloads), and compares
 against the committed baselines in ``benchmarks/BENCH_*.json``. Only
-scale-free metrics (throughput ratios, dip percentages, swap-lag steps) and
-fixed-size latencies are compared, and tolerances are deliberately generous
-— the gate exists to catch >2x regressions (a scheduler that stopped
-batching, a stall serializing the swap path), not wall-clock noise across
-runners. Fresh JSONs are written to ``--out-dir`` and uploaded as CI
-artifacts by the ``bench-gate`` job.
+scale-free metrics (throughput ratios, dip percentages, swap-lag steps,
+the chunked/monolithic p99 step-time ratio) and fixed-size latencies are
+compared, and tolerances are deliberately generous — the gate exists to
+catch >2x regressions (a scheduler that stopped batching, a stall
+serializing the swap path, chunked prefill that stopped bounding the
+admission spike), not wall-clock noise across runners. Two hard floors are
+absolute: chunked greedy tokens must stay bit-identical to the monolithic
+path, and the *committed baseline's* chunked/monolithic p99 ratio must
+stay at or under 0.5x (the acceptance bar the chunked-prefill PR landed —
+re-committing a degraded baseline fails the gate; the fresh run gets the
+usual 2x tolerance against it). Fresh JSONs are written to ``--out-dir``
+and uploaded as CI artifacts by the ``bench-gate`` job.
 
 Usage: PYTHONPATH=src python scripts/check_bench.py [--out-dir DIR]
 """
@@ -79,6 +85,24 @@ def main() -> None:
     lag_cap = max(2 * bc["swap_lag_steps"], 6)
     check("serving.reload.swap-lag", fc["swap_lag_steps"] <= lag_cap,
           f"{fc['swap_lag_steps']} steps (cap {lag_cap})")
+
+    # --- serving: chunked prefill must keep bounding the admission spike -
+    ft, bt = fresh_serving["prefill_tail"], base_serving["prefill_tail"]
+    check("serving.prefill-tail.tokens-identical",
+          ft["tokens_identical"] and ft["admission_clocks_identical"],
+          "chunked greedy tokens/admission clocks vs monolithic")
+    # the committed baseline must keep the acceptance bar (<= 0.5x), so a
+    # degraded baseline can't be re-committed to relax the gate below...
+    ratio, base_ratio = ft["p99_ratio"], bt["p99_ratio"]
+    check("serving.prefill-tail.baseline-acceptance", base_ratio <= 0.5,
+          f"committed chunked/monolithic p99 ratio {base_ratio:.2f}x "
+          "(bar 0.50x)")
+    # ...while the fresh run is held to >2x-regression-vs-baseline, plus an
+    # absolute ceiling where chunking structurally stopped bounding spikes
+    cap = min(2.0 * base_ratio, 0.95)
+    check("serving.prefill-tail.p99-ratio", ratio <= cap,
+          f"chunked/monolithic p99 step-time {ratio:.2f}x "
+          f"(baseline {base_ratio:.2f}x, cap {cap:.2f}x)")
 
     # --- reload: staging/swap latency on the fixed-size workloads --------
     for wl in ("toy_cnn", "reduced_lm"):

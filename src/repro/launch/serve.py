@@ -57,6 +57,12 @@ def main():
                     help="continuous: max ms to drain in-flight slots "
                          "before a staged reload is force-swapped "
                          "(negative: drain fully, never force)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="continuous: consume admission prefills at most "
+                         "this many prompt positions per engine step while "
+                         "resident slots keep decoding, bounding the "
+                         "step-time spike a long-prompt admission causes "
+                         "(0: monolithic prefill)")
     ap.add_argument("--prompts", nargs="*", default=["hello world"])
     ap.add_argument("--reload-from", default=None, metavar="CKPT_DIR",
                     help="watch this checkpoint dir and hot-swap new "
@@ -82,7 +88,8 @@ def main():
                                   quantize_kv=args.quant_kv,
                                   scheduler=args.scheduler,
                                   max_slots=args.max_slots,
-                                  swap_deadline_ms=deadline))
+                                  swap_deadline_ms=deadline,
+                                  prefill_chunk=args.prefill_chunk))
     if eng.quant_report:
         print("[serve]", eng.quant_report.summary())
     if args.reload_from:
@@ -108,6 +115,13 @@ def main():
               f"waves={sch['waves']} drains={sch['drains']} "
               f"forced_swaps={sch['forced_swaps']} "
               f"mean_occupancy={sch['mean_occupancy']:.2f}")
+        if sch["step_ms"]:
+            print(f"[serve] step-time p50/p95/p99 = "
+                  f"{sch['step_ms']['p50']:.1f}/{sch['step_ms']['p95']:.1f}/"
+                  f"{sch['step_ms']['p99']:.1f} ms "
+                  f"(prefill_chunk={sch['prefill_chunk']}, "
+                  f"{sch['chunk_steps']} chunk forwards, "
+                  f"{sch['pendings_abandoned']} abandoned)")
     for err in w["errors"]:
         print(f"[serve] reload error: {err}")
     eng.close()

@@ -177,13 +177,16 @@ Q_CHUNK = 1024   # query-block size bounding the (B,H,Cq,T) score tensor
 def _chunked_attention(q, k, v, *, scale, causal: bool,
                        window: Optional[int] = None,
                        q_chunk: int = Q_CHUNK,
-                       unroll: bool = False) -> jnp.ndarray:
+                       unroll: bool = False, row0=0) -> jnp.ndarray:
     """Train/prefill attention: KV repeated to H heads (so scores shard over
     the TP axis) and queries processed in blocks — the (B, H, Cq, T) block,
     not (B, H, S, T), bounds the working set. Softmax sees the full key axis
     per row, so this is exact (no online-softmax merge needed).
 
     q: (B,S,H,D); k/v: (B,T,KV,Dv) — repeated internally when KV < H.
+    ``row0`` offsets the queries' absolute positions (may be traced): chunked
+    prefill passes the cache clock so a partial-prompt chunk masks against
+    absolute positions while attending over the whole cache.
     """
     b, s, h, dq = q.shape
     t, kv = k.shape[1], k.shape[2]
@@ -192,12 +195,12 @@ def _chunked_attention(q, k, v, *, scale, causal: bool,
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
 
-    def block(qc, row0):
+    def block(qc, roff):
         scores = jnp.einsum("bshd,bthd->bhst", qc, k) * scale
         scores = shard_act(scores.astype(jnp.float32),
                            ("batch", "heads", None, None))
         if causal:
-            rows = row0 + jnp.arange(qc.shape[1])
+            rows = roff + jnp.arange(qc.shape[1])
             cols = jnp.arange(t)
             ok = cols[None, :] <= rows[:, None]
             if window is not None:
@@ -207,13 +210,14 @@ def _chunked_attention(q, k, v, *, scale, causal: bool,
         return jnp.einsum("bhst,bthd->bshd", p, v)
 
     if s <= q_chunk or s % q_chunk != 0:
-        return block(q, 0)
+        return block(q, row0)
     nc = s // q_chunk
     qr = q.reshape(b, nc, q_chunk, h, dq).swapaxes(0, 1)
     if unroll:
-        outs = jnp.stack([block(qr[i], i * q_chunk) for i in range(nc)])
+        outs = jnp.stack([block(qr[i], row0 + i * q_chunk)
+                          for i in range(nc)])
     else:
-        offs = jnp.arange(nc) * q_chunk
+        offs = row0 + jnp.arange(nc) * q_chunk
 
         def body(_, qc_off):
             qc, off = qc_off
@@ -244,11 +248,22 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
     """Self-attention.
 
     mode: "train"/"prefill" (full sequence, causal (+window) mask, prefill
-    also fills the cache) or "decode" (single new token against the cache).
+    also fills the cache), "decode" (single new token against the cache), or
+    "chunk" (a partial-prefill continuation: ``s`` prompt tokens written at
+    absolute position ``pos``, attending over the already-filled cache
+    prefix — the same repeated-KV einsum as prefill, so the chunked path's
+    activations match the monolithic prefill bit-for-bit).
     """
     if cfg.mla is not None:
+        if mode == "chunk":
+            raise NotImplementedError(
+                "chunked prefill is not implemented for MLA attention")
         return _mla_attention(params, x, cfg=cfg, rope=rope, mode=mode,
                               cache=cache, pos=pos)
+    if mode == "chunk" and cfg.window:
+        raise NotImplementedError(
+            "chunked prefill is not implemented for sliding-window "
+            "ring-buffer caches")
     b, s, d = x.shape
     hd = cfg.head_dim
     cos_t, sin_t = rope                      # (s, hd/2) for current tokens
@@ -270,6 +285,20 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
                                  unroll=cfg.unroll_chunks)
         if mode == "prefill":
             cache = _cache_write(cache, k, v, 0, cfg.window)
+    elif mode == "chunk":
+        # partial-prefill continuation: write this chunk at the clock, then
+        # run the prefill einsum against the whole cache with the rows'
+        # absolute positions masking the unwritten suffix (zeros → exp(-inf)
+        # → exact zero contributions, so the result is bit-identical to the
+        # monolithic prefill of the full sequence for chunk sizes >= 2)
+        cache = _cache_write(cache, k, v, pos, None)
+        kc, vc = _cache_read(cache)
+        kc = shard_act(kc, ("batch", "seq_shard", "kv_heads", None))
+        vc = shard_act(vc, ("batch", "seq_shard", "kv_heads", None))
+        out = _chunked_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                                 scale=scale, causal=True, window=None,
+                                 q_chunk=cfg.attn_q_chunk,
+                                 unroll=cfg.unroll_chunks, row0=pos)
     else:  # decode: s == 1, absolute position ``pos``
         cache = _cache_write(cache, k, v, pos, cfg.window)
         kc, vc = _cache_read(cache)

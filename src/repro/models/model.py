@@ -80,6 +80,11 @@ class LM:
         if mode == "decode":
             pos = caches["pos"]
             positions = pos[None]
+        elif mode == "chunk":
+            # partial-prefill continuation: the cache clock is the chunk's
+            # start offset; rows live at absolute positions pos..pos+s-1
+            pos = caches["pos"]
+            positions = pos + jnp.arange(s)
         else:
             pos = jnp.zeros((), jnp.int32)
             positions = jnp.arange(s)
@@ -120,6 +125,42 @@ class LM:
         logits, caches, _ = self.forward(params, batch, mode="prefill",
                                          caches=caches)
         return logits[:, -1], caches
+
+    def prefill_chunk(self, params, batch, caches
+                      ) -> Tuple[jnp.ndarray, dict]:
+        """Consume the next ``s`` prompt tokens of a partial prefill.
+
+        ``caches["pos"]`` is the chunk's start offset (0 for a fresh cache);
+        the chunk attends over the already-written cache prefix plus itself,
+        so feeding a prompt through this in any chunk split yields the same
+        cache and last-token logits as one :meth:`prefill` call, bit-exact.
+        Single-token chunks are padded to two rows internally: XLA lowers a
+        one-row gemm as a matvec whose accumulation order differs from the
+        monolithic prefill's, and the dummy row (whose cache write lands one
+        past the clock, always overwritten before any masked-in read) is the
+        cheapest way to stay on the gemm path.
+        """
+        toks = batch["tokens"]
+        singleton = toks.shape[1] == 1
+        if singleton:
+            p0 = caches["pos"]
+            toks = jnp.concatenate([toks, toks[:, -1:]], axis=1)
+        logits, caches, _ = self.forward(params, {"tokens": toks},
+                                         mode="chunk", caches=caches)
+        if singleton:
+            caches["pos"] = p0 + 1
+            return logits[:, 0], caches
+        return logits[:, -1], caches
+
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill is exact only for stacks where every mixer is
+        plain (non-MLA, non-windowed) attention with a dense FFN: recurrent
+        mixers and MoE capacity routing are chunk-split-dependent."""
+        from repro.models.transformer import layer_plan
+        return (not self.cfg.is_encdec and self.cfg.mla is None
+                and not self.cfg.window
+                and all(kind == "a" and not moe
+                        for kind, moe in layer_plan(self.cfg)))
 
     def decode_step(self, params, tokens, caches
                     ) -> Tuple[jnp.ndarray, dict]:

@@ -14,7 +14,10 @@ Scheduling lives in :mod:`repro.serving.scheduler`:
   over one persistent KV cache: queued requests are admitted into free
   slots at step boundaries, retire on EOS/max-tokens immediately, and a
   staged weight reload drains admission and swaps at a step boundary
-  (force-swap after ``swap_deadline_ms``).
+  (force-swap after ``swap_deadline_ms``). With ``prefill_chunk > 0`` an
+  admission prefill is consumed chunk-by-chunk across engine steps while
+  resident slots keep decoding, bounding per-step tail latency (greedy
+  tokens stay bit-identical to the monolithic path at equal padding).
 
 Weight ownership lives in :class:`repro.serving.weights.WeightStore`, not
 the engine: schedulers *acquire* a weight version at their swap points and
@@ -55,6 +58,16 @@ class ServeConfig:
     # continuous only: max ms to drain in-flight slots before a staged
     # weight version is force-swapped at a step boundary (None: drain fully)
     swap_deadline_ms: Optional[float] = 250.0
+    # continuous only: admission prefill consumes at most this many prompt
+    # positions per engine step while resident slots keep decoding, bounding
+    # the step-time spike a long-prompt admission causes (0: monolithic
+    # prefill, the round scheduler always prefills monolithically)
+    prefill_chunk: int = 0
+    # continuous only: after this many mid-flight admissions that skipped
+    # the queue head, admission narrows to the head until it lands (FCFS-
+    # with-skip would otherwise starve a long request behind a stream of
+    # short ones that keeps the pool from ever emptying)
+    starvation_limit: int = 32
 
 
 class ServeEngine:
@@ -76,8 +89,12 @@ class ServeEngine:
         # only when jax traces a new shape specialization, so tests can
         # assert same-shape rounds/steps never retrace
         self.trace_counts: Dict[str, int] = \
-            {"prefill": 0, "decode": 0, "admit": 0}
+            {"prefill": 0, "prefill_chunk": 0, "decode": 0, "admit": 0}
         self._prefill = self._jit_counted("prefill", self.model.prefill)
+        # chunk continuation: one trace per distinct chunk length (the
+        # start offset is a traced cache scalar, so it never retraces)
+        self._prefill_chunk = self._jit_counted("prefill_chunk",
+                                                self.model.prefill_chunk)
         self._decode = self._jit_counted("decode", self.model.decode_step)
         self._admit_rows = self._jit_counted("admit", admit_rows)
         self._key = jax.random.PRNGKey(0)

@@ -44,6 +44,27 @@ up to position ``P+m-1``, so admission requires ``P + m <= max_len``. The
 clock resets to 0 whenever the pool empties (a fresh wave re-uses the pool
 cache; rows at/after the new clock are masked by position, rows before it
 are rewritten by the wave's prefill).
+
+Chunked prefill (``ServeConfig.prefill_chunk > 0``): admission prefill is
+the continuous scheduler's one unbounded step — a long-prompt admission
+stalls every resident slot for the full prefill. With chunking on, an
+admission becomes a :class:`PendingPrefill` that consumes at most
+``prefill_chunk`` positions of its left-padded prompt per engine step on
+the side cache (``LM.prefill_chunk`` continues from the partial cache)
+while resident slots keep decoding; the rows are scattered into the pool
+(the same ``admit_rows`` path) only when the prefill completes. Because
+residents advance the clock one position per step while the pending
+consumes ``chunk`` per step, the admission commits up front to the
+completion clock ``P`` solving ``P = C0 + s - 1`` with ``s`` chunk-steps
+covering ``P`` positions (``s*(chunk-1) >= C0-1``); the pending's prompt is
+left-padded to that ``P``, so its greedy tokens are bit-identical to the
+monolithic path admitted at the same padding (chunk continuation reuses the
+prefill einsums; masked-out cache columns contribute exact zeros). With
+``chunk == 1`` a mid-flight pending can never catch a moving clock, so such
+admissions wait for the pool to empty (frozen clock) — fresh-wave chunking
+works at any chunk size. Reload drains wait on pendings like any in-flight
+work; a deadline force-swap *abandons* the pending (its chunks ran on the
+old weights) and re-queues its requests at the front of the queue.
 """
 from __future__ import annotations
 
@@ -115,6 +136,28 @@ class _Slot:
     swap_ms: float = 0.0
     forced_swaps: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class PendingPrefill:
+    """A chunked admission in flight: its prompt (left-padded to the
+    committed completion clock) is consumed ``prefill_chunk`` positions per
+    engine step on a side cache; only on completion are the rows scattered
+    into the pool and slots created."""
+    chosen: List[Tuple[int, Request]]   # (order, request) per row
+    slot_ids: List[int]                 # reserved pool rows
+    target: int                         # committed completion clock P
+    version: int                        # weight version pinned at creation
+    tokens: np.ndarray                  # (k, P) left-padded prompt matrix
+    done: int = 0                       # positions consumed so far
+    cache: Any = None                   # side cache (k rows), lazy init
+    logits: Any = None                  # last chunk's final-token logits
+    prefill_ms: float = 0.0             # accumulated chunk wall time
+    chunks: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.target - self.done
 
 
 class _SchedulerBase:
@@ -268,11 +311,38 @@ class ContinuousScheduler(_SchedulerBase):
                 "continuous scheduler does not support encoder-decoder "
                 "models yet (per-slot encoder outputs have admission-"
                 "dependent lengths); use scheduler='round'")
+        self.chunk = int(self.cfg.prefill_chunk or 0)
+        if self.chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
+        if self.chunk:
+            if self.cfg.quantize_kv:
+                raise NotImplementedError(
+                    "chunked prefill with quantized KV caches is not "
+                    "supported: chunk continuations would attend to "
+                    "dequantized prefix keys, breaking the bit-exact "
+                    "equivalence with the monolithic prefill")
+            if not self.model.supports_chunked_prefill():
+                raise NotImplementedError(
+                    "chunked prefill requires a plain-attention dense stack "
+                    "(no MLA / sliding window / MoE / recurrent mixers): "
+                    "those paths fold state across the whole prefix in "
+                    "chunk-split-dependent order; set prefill_chunk=0")
         self.max_slots = self.cfg.max_slots or self.cfg.max_batch
         self.slots: List[Optional[_Slot]] = [None] * self.max_slots
         self._cache = None            # persistent pool cache (lazy init)
         self._logits = None           # (max_slots, vocab) pending logits
+        # admission side caches, keyed by row count and reused across
+        # admissions: a fresh allocation per admission owned the admission
+        # step's latency at small scales. Stale rows are harmless — every
+        # position is rewritten before any masked-in read (prefill writes
+        # position p before any row >= p attends; decode writes the clock
+        # position before reading it), and masked columns contribute exact
+        # zeros — only the ``pos`` scalar must be rewound per admission.
+        self._side_caches: Dict[int, Any] = {}
         self._pending_swap_ms = 0.0   # swap time to attribute at admission
+        self._pending: Optional[PendingPrefill] = None
+        self._head_skips = 0          # FCFS-with-skip starvation guard
+        self._last_emit_t: Optional[float] = None
         # observability
         self.admitted = 0
         self.retired = 0
@@ -281,7 +351,13 @@ class ContinuousScheduler(_SchedulerBase):
         self.waves = 0
         self.occupancy_sum = 0
         self.max_occupancy = 0
+        self.chunk_steps = 0          # prefill-chunk forwards issued
+        self.pendings_started = 0
+        self.pendings_abandoned = 0   # force-swap abandoned chunked admits
         self.step_log: Optional[List[Dict[str, Any]]] = None
+        # bounded: per-sampling-step wall time, feeds the stats() tail
+        # percentiles (the metric chunked prefill exists to bound)
+        self.step_ms_log: collections.deque = collections.deque(maxlen=4096)
         # bounded: one entry per admission, observable padding/version
         self.admission_log: collections.deque = \
             collections.deque(maxlen=1024)
@@ -303,8 +379,10 @@ class ContinuousScheduler(_SchedulerBase):
             queue.append((i, r))
         clock = 0
         drain_t0 = None
+        self._last_emit_t = time.perf_counter()
 
-        while queue or any(s is not None for s in self.slots):
+        while queue or self._pending is not None \
+                or any(s is not None for s in self.slots):
             active_ids = [i for i, s in enumerate(self.slots)
                           if s is not None]
             # ---- reload-awareness: drain, then swap at a step boundary ----
@@ -313,15 +391,23 @@ class ContinuousScheduler(_SchedulerBase):
                 if drain_t0 is None:
                     drain_t0 = time.perf_counter()
                     self.drains += 1
-                    self.store.note_drain(len(active_ids))
+                    in_flight = len(active_ids) + (
+                        len(self._pending.chosen) if self._pending else 0)
+                    self.store.note_drain(in_flight)
                 elapsed_ms = (time.perf_counter() - drain_t0) * 1e3
                 deadline = cfg.swap_deadline_ms
                 # the deadline clock starts when the version finished
                 # staging (store-side), not when this loop first saw it —
-                # a version staged between generate() calls swaps at once
-                if not active_ids or (deadline is not None
-                                      and staged["age_ms"] >= deadline):
-                    forced = bool(active_ids)
+                # a version staged between generate() calls swaps at once.
+                # A chunked admission in flight is drained like any other
+                # in-flight work; a forced swap abandons it instead (its
+                # chunks ran on the old weights) and re-queues its requests
+                busy = bool(active_ids) or self._pending is not None
+                if not busy or (deadline is not None
+                                and staged["age_ms"] >= deadline):
+                    if self._pending is not None:
+                        self._abandon_pending(queue)
+                    forced = busy
                     ver, sms = self.store.acquire()
                     params = ver.params
                     self.store.note_swap(forced=forced, drain_ms=elapsed_ms)
@@ -334,23 +420,58 @@ class ContinuousScheduler(_SchedulerBase):
                     drain_t0 = None
             draining = self.store.staged_pending
 
-            # ---- admission into free slots (paused while draining) ----
-            free_ids = [i for i, s in enumerate(self.slots) if s is None]
-            if queue and free_ids and not draining:
-                fresh = len(free_ids) == self.max_slots
-                chosen, new_clock = self._pick(queue, clock,
-                                               len(free_ids), fresh)
-                if chosen:
-                    if fresh:
-                        self.waves += 1
-                    clock = new_clock
-                    self._admit(chosen, free_ids, clock, params, ver.version)
+            # ---- admission into free slots (paused while draining or
+            # while a chunked admission is already in flight) ----
+            admit_ms = 0.0
+            if self._pending is None and queue and not draining:
+                free_ids = [i for i, s in enumerate(self.slots)
+                            if s is None]
+                if free_ids:
+                    fresh = len(free_ids) == self.max_slots
+                    head = queue[0]
+                    limit_head = (not fresh and self._head_skips
+                                  >= cfg.starvation_limit)
+                    if self.chunk:
+                        chosen = self._start_pending(
+                            queue, clock, free_ids, fresh, ver.version,
+                            limit_head)
+                    else:
+                        chosen, new_clock = self._pick(
+                            queue, clock, len(free_ids), fresh, limit_head)
+                        if chosen:
+                            if fresh:
+                                self.waves += 1
+                            clock = new_clock
+                            t0 = time.perf_counter()
+                            self._admit(chosen, free_ids, clock, params,
+                                        ver.version)
+                            admit_ms = (time.perf_counter() - t0) * 1e3
+                    # FCFS-with-skip starvation guard: count picks that
+                    # jumped the queue head; past the limit, mid-flight
+                    # admission narrows to the head only, so the pool
+                    # drains into a fresh wave that must admit it
+                    if fresh or (chosen and head in chosen):
+                        self._head_skips = 0
+                    elif chosen:
+                        self._head_skips += 1
+
+            # ---- chunked admission: consume this step's prefill budget;
+            # scatter into the pool when it completes at its clock ----
+            chunk_ms = 0.0
+            if self._pending is not None:
+                chunk_ms = self._advance_pending(params)
+                p = self._pending
+                if p.done >= p.target and (clock == p.target
+                                           or not active_ids):
+                    clock = self._scatter_pending(p)
 
             active_ids = [i for i, s in enumerate(self.slots)
                           if s is not None]
             if not active_ids:
-                # only reachable while draining paused admission with an
-                # empty pool; the swap branch fires on the next iteration
+                # reachable while draining paused admission with an empty
+                # pool (the swap branch fires next iteration) or while a
+                # chunked admission is still consuming its prompt on an
+                # empty pool (the clock is frozen; chunks run back-to-back)
                 continue
 
             # ---- one lockstep step: sample at `clock`, retire, decode ----
@@ -359,6 +480,9 @@ class ContinuousScheduler(_SchedulerBase):
             nxt_np = np.asarray(nxt)
             recorded = 0
             t_now = time.perf_counter()
+            step_ms = (t_now - self._last_emit_t) * 1e3
+            self._last_emit_t = t_now
+            self.step_ms_log.append(step_ms)
             for i in active_ids:
                 s = self.slots[i]
                 tok = int(nxt_np[i])
@@ -377,7 +501,9 @@ class ContinuousScheduler(_SchedulerBase):
             self.max_occupancy = max(self.max_occupancy, recorded)
             self._emit_step({"step": self.steps_total, "clock": clock,
                              "recorded": recorded, "version": ver.version,
-                             "draining": draining, "t": t_now})
+                             "draining": draining, "t": t_now,
+                             "step_ms": step_ms, "chunk_ms": chunk_ms,
+                             "admit_ms": admit_ms})
             if any(s is not None for s in self.slots):
                 self._logits, self._cache = self.eng._decode(
                     params, nxt[:, None], self._cache)
@@ -385,22 +511,32 @@ class ContinuousScheduler(_SchedulerBase):
         return results  # type: ignore[return-value]
 
     def stats(self) -> Dict[str, Any]:
+        ms = np.asarray(self.step_ms_log, np.float64)
+        tail = {f"p{q}": float(np.percentile(ms, q)) for q in (50, 95, 99)} \
+            if ms.size else {}
         return {"kind": self.name, "max_slots": self.max_slots,
                 "steps": self.steps_total, "admitted": self.admitted,
                 "retired": self.retired, "waves": self.waves,
                 "drains": self.drains, "forced_swaps": self.forced_swaps,
                 "mean_occupancy": (self.occupancy_sum / self.steps_total
                                    if self.steps_total else 0.0),
-                "max_occupancy": self.max_occupancy}
+                "max_occupancy": self.max_occupancy,
+                "prefill_chunk": self.chunk,
+                "chunk_steps": self.chunk_steps,
+                "pendings_started": self.pendings_started,
+                "pendings_abandoned": self.pendings_abandoned,
+                "step_ms": tail}
 
     # ------------------------------------------------------------ internals
-    def _pick(self, queue, clock: int, nfree: int, fresh: bool):
+    def _pick(self, queue, clock: int, nfree: int, fresh: bool,
+              limit_head: bool = False):
         """Choose up to ``nfree`` queued requests admissible at the clock.
 
         Mid-flight (``fresh=False``): FCFS with skip — a request fits iff
         its prompt fits under the clock (``L <= clock``; the clock advances
         one position per step, so longer prompts become admissible soon)
-        and its budget fits the cache horizon.
+        and its budget fits the cache horizon. ``limit_head`` narrows the
+        scan to the queue head (the starvation guard's anti-skip mode).
 
         Fresh wave (``fresh=True``): the pool is empty, so the clock
         restarts at the wave's longest admitted prompt. The queue head is
@@ -412,7 +548,8 @@ class ContinuousScheduler(_SchedulerBase):
         max_len = self.cfg.max_len
         chosen: List[Tuple[int, Request]] = []
         new_clock = 0 if fresh else clock
-        for item in list(queue):
+        items = [queue[0]] if (limit_head and not fresh) else list(queue)
+        for item in items:
             if len(chosen) >= nfree:
                 break
             _, r = item
@@ -431,6 +568,149 @@ class ContinuousScheduler(_SchedulerBase):
             queue.remove(item)
         return chosen, new_clock
 
+    # ------------------------------------------- chunked admission pipeline
+    def _solve_target(self, clock: int, longest: int) -> Optional[int]:
+        """Committed completion clock for a mid-flight chunked admission.
+
+        The pending consumes ``chunk`` positions per engine step while
+        residents advance the clock one per step, so completing at clock
+        ``P = clock + s - 1`` after ``s`` chunk-steps requires the chunks
+        to cover all ``P`` positions (``s * chunk >= P``) and the prompt to
+        fit the padding (``P >= longest``; prompts *longer than the clock*
+        are admissible — the chunks catch up, which the monolithic path
+        cannot do at all). Returns None when no ``s`` exists (``chunk == 1``
+        against a moving clock can never catch up; such requests wait for
+        the pool to empty, where the frozen clock makes any chunk feasible).
+        """
+        s = max(1, longest - clock + 1)
+        if self.chunk > 1:
+            s = max(s, -(-(clock - 1) // (self.chunk - 1)))
+        elif clock + s - 1 > s:
+            return None
+        return clock + s - 1
+
+    def _start_pending(self, queue, clock: int, free_ids, fresh: bool,
+                       version: int, limit_head: bool = False):
+        """Pick requests for a chunked admission and commit its pad-to
+        clock. Fresh waves reuse :meth:`_pick` (frozen clock: the wave's
+        padding is the target); mid-flight picks grow the set under the
+        solved target, re-checking every earlier choice as it rises."""
+        max_len = self.cfg.max_len
+        if fresh:
+            chosen, target = self._pick(queue, clock, len(free_ids), True)
+        else:
+            chosen = []
+            target = None
+            items = [queue[0]] if limit_head else list(queue)
+            for item in items:
+                if len(chosen) >= len(free_ids):
+                    break
+                _, r = item
+                cand_t = self._solve_target(
+                    clock, max([len(r.prompt)]
+                               + [len(c.prompt) for _, c in chosen]))
+                if cand_t is None:
+                    continue
+                if (cand_t + r.max_new_tokens <= max_len
+                        and all(cand_t + c.max_new_tokens <= max_len
+                                for _, c in chosen)):
+                    chosen.append(item)
+                    target = cand_t
+            for item in chosen:
+                queue.remove(item)
+        if not chosen:
+            return []
+        if fresh:
+            self.waves += 1
+        k = len(chosen)
+        tokens = np.full((k, target), self.cfg.pad_id, np.int32)
+        for j, (_, r) in enumerate(chosen):
+            tokens[j, target - len(r.prompt):] = np.asarray(r.prompt)
+        self._pending = PendingPrefill(chosen=chosen,
+                                       slot_ids=list(free_ids[:k]),
+                                       target=target, version=version,
+                                       tokens=tokens)
+        self.pendings_started += 1
+        return chosen
+
+    def _side_cache(self, k: int):
+        """A reusable ``k``-row admission cache with the clock rewound."""
+        cache = self._side_caches.get(k)
+        if cache is None:
+            cache = self.model.init_cache(k, self.cfg.max_len,
+                                          quantize_kv=self.cfg.quantize_kv)
+            self._side_caches[k] = cache
+        cache = dict(cache)
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        return cache
+
+    def _advance_pending(self, params) -> float:
+        """Consume up to ``prefill_chunk`` positions of the pending's
+        padded prompt on the side cache; returns the chunk's wall time."""
+        p = self._pending
+        n = min(self.chunk, p.remaining)
+        if n <= 0:
+            return 0.0
+        if p.cache is None:
+            p.cache = self._side_cache(len(p.slot_ids))
+        t0 = time.perf_counter()
+        toks = jnp.asarray(p.tokens[:, p.done:p.done + n])
+        # synchronous on purpose: letting chunks queue up async behind the
+        # in-flight decode reads as overlap on idle machines but builds an
+        # unbounded compute backlog on saturated ones, which the scatter
+        # step then pays in one spike — the exact tail this feature bounds
+        p.logits, p.cache = self.eng._prefill_chunk(
+            params, {"tokens": toks}, p.cache)
+        jax.block_until_ready(p.logits)
+        ms = (time.perf_counter() - t0) * 1e3
+        p.prefill_ms += ms
+        p.chunks += 1
+        p.done += n
+        self.chunk_steps += 1
+        return ms
+
+    def _scatter_pending(self, p: PendingPrefill) -> int:
+        """A completed pending joins the pool: scatter its side-cache rows
+        and final-token logits (the existing ``admit_rows`` path) and
+        create its slots at the committed clock. Returns the new clock."""
+        t0 = time.perf_counter()
+        if self._cache is None:
+            self._cache = self.model.init_cache(
+                self.max_slots, self.cfg.max_len,
+                quantize_kv=self.cfg.quantize_kv)
+            self._logits = jnp.zeros((self.max_slots, p.logits.shape[-1]),
+                                     p.logits.dtype)
+        idx = jnp.asarray(np.asarray(p.slot_ids, np.int32))
+        self._cache, self._logits = self.eng._admit_rows(
+            self._cache, p.cache, self._logits, p.logits, idx)
+        jax.block_until_ready(self._logits)
+        p.prefill_ms += (time.perf_counter() - t0) * 1e3
+        t_now = time.perf_counter()
+        for j, (order, r) in enumerate(p.chosen):
+            self.slots[p.slot_ids[j]] = _Slot(
+                order=order, req=r, version=p.version, clock0=p.target,
+                t0=t_now, prefill_ms=p.prefill_ms,
+                swap_ms=self._pending_swap_ms)
+            self.admission_log.append(
+                {"request_id": r.request_id, "slot": p.slot_ids[j],
+                 "clock": p.target, "version": p.version,
+                 "chunks": p.chunks})
+        self._pending_swap_ms = 0.0
+        self.admitted += len(p.chosen)
+        self._pending = None
+        return p.target
+
+    def _abandon_pending(self, queue) -> None:
+        """A force-swap lands while a chunked admission is mid-prefill: its
+        chunks ran on the outgoing weights, so drop the side cache and
+        return its requests to the front of the queue in FCFS order (they
+        re-admit under the new version)."""
+        p = self._pending
+        for item in reversed(p.chosen):
+            queue.appendleft(item)
+        self._pending = None
+        self.pendings_abandoned += 1
+
     def _admit(self, chosen, free_ids, clock: int, params, version: int):
         """Prefill ``chosen`` left-padded to ``clock`` on a side cache and
         scatter the rows into the pool at the first ``len(chosen)`` free
@@ -440,8 +720,7 @@ class ContinuousScheduler(_SchedulerBase):
         tokens = np.full((k, clock), cfg.pad_id, np.int32)
         for j, (_, r) in enumerate(chosen):
             tokens[j, clock - len(r.prompt):] = np.asarray(r.prompt)
-        tmp_cache = self.model.init_cache(k, cfg.max_len,
-                                          quantize_kv=cfg.quantize_kv)
+        tmp_cache = self._side_cache(k)
         t0 = time.perf_counter()
         lg, tmp_cache = self.eng._prefill(
             params, {"tokens": jnp.asarray(tokens)}, tmp_cache)

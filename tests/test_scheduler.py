@@ -106,11 +106,13 @@ def test_round_tokens_independent_of_batch_size_and_no_retrace():
     a = big.generate(reqs)
     assert [o.tokens for o in a] == \
         [o.tokens for o in small.generate(reqs)]
-    assert big.trace_counts == {"prefill": 1, "decode": 1, "admit": 0}
+    assert big.trace_counts == {"prefill": 1, "prefill_chunk": 0,
+                                "decode": 1, "admit": 0}
     for _ in range(3):                      # same shapes: no retrace
         assert [o.tokens for o in big.generate(reqs)] == \
             [o.tokens for o in a]
-    assert big.trace_counts == {"prefill": 1, "decode": 1, "admit": 0}
+    assert big.trace_counts == {"prefill": 1, "prefill_chunk": 0,
+                                "decode": 1, "admit": 0}
     big.generate(_mixed_reqs()[:3])         # new batch size: one new trace
     assert big.trace_counts["prefill"] == 2
     assert big.trace_counts["decode"] == 2
@@ -253,6 +255,265 @@ def test_continuous_other_archs_smoke(arch):
     outs = eng.generate([Request(prompt=[3, 1, 4], max_new_tokens=4,
                                  request_id=i) for i in range(3)])
     assert all(len(o.tokens) == 4 for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: bit-identical admission, interleaving, starvation guard
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 2, 5, 6, 7])
+def test_chunked_fresh_wave_bit_identical_to_monolithic(chunk):
+    """A fresh wave prefilled in chunks (sizes 1, non-dividing, exactly the
+    wave padding, and larger than it) produces bit-identical greedy tokens
+    to the monolithic admission path: the chunk continuation runs the same
+    prefill einsums against the cache prefix, and masked-out columns
+    contribute exact zeros."""
+    model, params = _tiny()
+    mono = ServeEngine(model, params,
+                       ServeConfig(max_batch=4, max_len=32,
+                                   scheduler="continuous"))
+    chunked = ServeEngine(model, params,
+                          ServeConfig(max_batch=4, max_len=32,
+                                      scheduler="continuous",
+                                      prefill_chunk=chunk))
+    chunked.scheduler.step_log = steps = []
+    mo = mono.generate(_mixed_reqs())
+    co = chunked.generate(_mixed_reqs())
+    assert [o.tokens for o in mo] == [o.tokens for o in co]
+    ms, cs = mono.stats()["scheduler"], chunked.stats()["scheduler"]
+    assert cs["steps"] == ms["steps"] == 8     # sampling steps unchanged
+    # wave padding 6 consumed `chunk` positions per prefill forward
+    assert cs["chunk_steps"] == -(-6 // chunk)
+    assert cs["pendings_started"] == 1 and cs["pendings_abandoned"] == 0
+    assert chunked.trace_counts["prefill"] == 0
+    assert chunked.trace_counts["decode"] == 1
+    # per-step tail-latency observability rides along with chunking
+    assert steps and all("step_ms" in e and "chunk_ms" in e for e in steps)
+    assert set(cs["step_ms"]) == {"p50", "p95", "p99"}
+
+
+def test_chunked_midflight_admission_equivalent_at_equal_padding():
+    """A chunked admission into a freed slot commits to completion clock P
+    and left-pads to P — bit-identical to the round engine at padding P
+    (pinned with a filler prompt) while the resident keeps decoding."""
+    model, params = _tiny()
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=2, request_id=0),
+            Request(prompt=[5, 6, 7, 8, 9], max_new_tokens=12,
+                    request_id=1),
+            Request(prompt=[11, 12], max_new_tokens=4, request_id=2)]
+    cont = ServeEngine(model, params,
+                       ServeConfig(max_batch=2, max_len=64,
+                                   scheduler="continuous",
+                                   prefill_chunk=2))
+    co = cont.generate(reqs)
+    adm = {e["request_id"]: e for e in cont.scheduler.admission_log}
+    # request 0 retires at clock 7; the pending (chunk=2 nets one position
+    # of catch-up per step against the moving clock) commits to P=12
+    assert adm[2]["clock"] == 12 and adm[2]["chunks"] == 6
+    rnd = ServeEngine(model, params, ServeConfig(max_batch=2, max_len=64))
+    ctrl = rnd.generate(
+        [Request(prompt=reqs[2].prompt, max_new_tokens=4, request_id=2),
+         Request(prompt=[3] * adm[2]["clock"], max_new_tokens=1,
+                 request_id=99)])
+    assert co[2].tokens == ctrl[0].tokens
+    # the resident long request never noticed the interleaved prefill
+    solo = rnd.generate([reqs[0], reqs[1]])
+    assert co[1].tokens == solo[1].tokens
+
+
+def test_chunked_admits_prompt_longer_than_clock():
+    """Chunked prefill admits a prompt longer than the current clock (the
+    chunks catch up to a committed future clock) — an admission the
+    monolithic path cannot express at all; tokens still match the round
+    engine at the committed padding."""
+    model, params = _tiny()
+    long_prompt = [7, 3, 9, 4, 2, 8, 6, 1, 5, 2, 4, 6]       # L=12
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=2, request_id=0),
+            Request(prompt=[5, 6, 7], max_new_tokens=24, request_id=1),
+            Request(prompt=long_prompt, max_new_tokens=4, request_id=2)]
+    cont = ServeEngine(model, params,
+                       ServeConfig(max_batch=2, max_len=64,
+                                   scheduler="continuous",
+                                   prefill_chunk=4))
+    co = cont.generate(reqs)
+    adm = {e["request_id"]: e for e in cont.scheduler.admission_log}
+    assert adm[2]["clock"] >= len(long_prompt) > adm[0]["clock"]
+    rnd = ServeEngine(model, params, ServeConfig(max_batch=2, max_len=64))
+    ctrl = rnd.generate(
+        [Request(prompt=long_prompt, max_new_tokens=4, request_id=2),
+         Request(prompt=[3] * adm[2]["clock"], max_new_tokens=1,
+                 request_id=99)])
+    assert co[2].tokens == ctrl[0].tokens
+
+
+def test_chunk_one_midflight_waits_for_empty_pool():
+    """chunk=1 can never catch a moving clock, so a mid-flight admission
+    waits for the pool to empty (frozen clock) and lands as a fresh wave at
+    its own prompt length."""
+    model, params = _tiny()
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=4, request_id=0),
+            Request(prompt=[5, 6, 7, 8], max_new_tokens=6, request_id=1),
+            Request(prompt=[11, 12], max_new_tokens=3, request_id=2)]
+    cont = ServeEngine(model, params,
+                       ServeConfig(max_batch=2, max_len=32,
+                                   scheduler="continuous",
+                                   prefill_chunk=1))
+    co = cont.generate(reqs)
+    adm = {e["request_id"]: e for e in cont.scheduler.admission_log}
+    assert adm[2]["clock"] == 2                # fresh wave at its own L
+    assert cont.stats()["scheduler"]["waves"] == 2
+    rnd = ServeEngine(model, params, ServeConfig(max_batch=2, max_len=32))
+    solo = rnd.generate([reqs[2]])
+    assert co[2].tokens == solo[0].tokens
+
+
+def test_chunked_interleaves_with_eos_retirement():
+    """Residents retiring on EOS mid-pending (emptying the pool and
+    freezing the clock) never disturb the chunked admission: it completes
+    back-to-back and its tokens match the round engine at the committed
+    padding."""
+    model, params = _tiny()
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=2, request_id=0),
+            Request(prompt=[5, 6, 7], max_new_tokens=10, request_id=1),
+            Request(prompt=[11, 12], max_new_tokens=4, request_id=2)]
+    base = ServeEngine(model, params,
+                       ServeConfig(max_batch=2, max_len=64,
+                                   scheduler="continuous",
+                                   prefill_chunk=2)).generate(reqs)
+    # an EOS request 1 emits early, and request 2 never does
+    eos = next(t for t in base[1].tokens[:5]
+               if t not in base[2].tokens and t != 0)
+    cont = ServeEngine(model, params,
+                       ServeConfig(max_batch=2, max_len=64, eos_id=eos,
+                                   scheduler="continuous",
+                                   prefill_chunk=2))
+    co = cont.generate(reqs)
+    cut = base[1].tokens.index(eos) + 1
+    assert co[1].tokens == base[1].tokens[:cut]
+    adm = {e["request_id"]: e for e in cont.scheduler.admission_log}
+    rnd = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_len=64, eos_id=eos))
+    ctrl = rnd.generate(
+        [Request(prompt=reqs[2].prompt, max_new_tokens=4, request_id=2),
+         Request(prompt=[3] * adm[2]["clock"], max_new_tokens=1,
+                 request_id=99)])
+    assert co[2].tokens == ctrl[0].tokens
+
+
+def test_chunked_pending_drains_before_swap():
+    """A staged reload drains a chunked admission like any in-flight work:
+    the pending finishes its prefill and its request completes on the old
+    version; the swap lands once the pool is empty and later admissions
+    serve the new version."""
+    model, params = _tiny(0)
+    _, params2 = _tiny(1)
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_len=64,
+                                  scheduler="continuous",
+                                  prefill_chunk=2,
+                                  swap_deadline_ms=None))
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=2, request_id=0),
+            Request(prompt=[5, 6, 7, 8, 9], max_new_tokens=12,
+                    request_id=1),
+            Request(prompt=[11, 12], max_new_tokens=4, request_id=2),
+            Request(prompt=[13, 14], max_new_tokens=3, request_id=3)]
+    _stage_at_step(eng, 5, params2)            # pending for req 2 in flight
+    outs = eng.generate(reqs)
+    assert [o.weights_version for o in outs] == [1, 1, 1, 2]
+    assert all(o.forced_swaps == 0 for o in outs)
+    assert all(len(o.tokens) == r.max_new_tokens
+               for o, r in zip(outs, reqs))
+    st = eng.stats()
+    assert st["scheduler"]["pendings_abandoned"] == 0
+    assert st["scheduler"]["forced_swaps"] == 0
+    assert st["weights"]["swaps"] == 1
+
+
+def test_force_swap_abandons_pending_and_requeues():
+    """A deadline force-swap mid-pending abandons the chunked admission
+    (its chunks ran on the outgoing weights): the requests re-queue at the
+    front, re-admit under the new version, and their tokens match a round
+    engine on the new weights at the re-admission padding."""
+    model, params = _tiny(0)
+    _, params2 = _tiny(1)
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_len=64,
+                                  scheduler="continuous",
+                                  prefill_chunk=2,
+                                  swap_deadline_ms=0.0))
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=2, request_id=0),
+            Request(prompt=[5, 6, 7, 8, 9], max_new_tokens=16,
+                    request_id=1),
+            Request(prompt=[11, 12], max_new_tokens=4, request_id=2)]
+    _stage_at_step(eng, 5, params2)            # pending for req 2 in flight
+    outs = eng.generate(reqs)
+    st = eng.stats()
+    assert st["scheduler"]["pendings_abandoned"] == 1
+    assert st["scheduler"]["forced_swaps"] == 1
+    assert outs[1].forced_swaps == 1           # in flight across the swap
+    assert outs[2].weights_version == 2        # re-admitted post-swap
+    assert all(len(o.tokens) == r.max_new_tokens
+               for o, r in zip(outs, reqs))
+    adm = [e for e in eng.scheduler.admission_log
+           if e["request_id"] == 2]
+    assert adm[-1]["version"] == 2
+    # the abandoned side cache left no trace: tokens match a fresh round
+    # engine on the NEW weights at the re-admission padding
+    rnd = ServeEngine(model, params2,
+                      ServeConfig(max_batch=2, max_len=64))
+    ctrl = rnd.generate(
+        [Request(prompt=reqs[2].prompt, max_new_tokens=4, request_id=2),
+         Request(prompt=[3] * adm[-1]["clock"], max_new_tokens=1,
+                 request_id=99)])
+    assert outs[2].tokens == ctrl[0].tokens
+
+
+@pytest.mark.parametrize("scheduler_chunk", [4, 0])
+def test_starvation_guard_bounds_head_skips(scheduler_chunk):
+    """FCFS-with-skip regression: a stream of short requests behind a long
+    one used to refill freed slots forever, so the pool never emptied and
+    the long request starved until the whole queue drained. Past
+    ``starvation_limit`` head-skips, admission narrows to the head: the
+    pool drains into a fresh wave that must admit it."""
+    model, params = _tiny()
+    long_req = Request(prompt=[9] * 20, max_new_tokens=4, request_id=2)
+    # staggered budgets: retirements alternate, so refills keep the pool
+    # from ever emptying while any short remains queued
+    shorts = [Request(prompt=[1 + i, 2], max_new_tokens=3 + 3 * (i % 2),
+                      request_id=10 + i) for i in range(6)]
+    reqs = shorts[:2] + [long_req] + shorts[2:]
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_len=64,
+                                  scheduler="continuous",
+                                  prefill_chunk=scheduler_chunk,
+                                  starvation_limit=2))
+    outs = eng.generate(reqs)
+    assert all(len(o.tokens) == r.max_new_tokens
+               for o, r in zip(outs, reqs))
+    order = [e["request_id"] for e in eng.scheduler.admission_log]
+    # the long request was admitted before the queue ran dry behind it
+    assert order.index(2) < len(order) - 2
+    # wave reset / head admission cleared the skip bookkeeping
+    assert eng.scheduler._head_skips == 0
+
+
+def test_chunked_rejected_for_unsupported_stacks():
+    """Chunk continuations are only exact for plain-attention dense stacks;
+    everything else must be rejected up front, as must quantized KV caches
+    (chunks would attend to dequantized prefix keys)."""
+    cfg = get_config("mixtral-8x7b", reduced=True)   # window + MoE
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="chunked prefill"):
+        ServeEngine(model, params,
+                    ServeConfig(max_batch=2, max_len=32,
+                                scheduler="continuous", prefill_chunk=4))
+    tiny_model, tiny_params = _tiny()
+    with pytest.raises(NotImplementedError, match="quantized KV"):
+        ServeEngine(tiny_model, tiny_params,
+                    ServeConfig(max_batch=2, max_len=32, quantize_kv=True,
+                                scheduler="continuous", prefill_chunk=4))
 
 
 # ---------------------------------------------------------------------------
