@@ -22,6 +22,14 @@ every request in a round waits for the round's longest):
   Both paths pad the long prompts to the same clock, so their greedy
   tokens must be bit-identical (verified) — the chunked path buys its
   p50/p95/p99 step-time profile for free.
+* **shared prefix** — a chat-shaped serial-turn workload: every turn
+  carries the same long system prompt plus a short distinct user suffix.
+  The contiguous backend re-prefills the full prompt every turn; the
+  paged backend (``kv_backend="paged"``) finds the system prompt in its
+  block registry and prefills only the suffix. Greedy tokens must be
+  bit-identical between the backends (verified); reported are the
+  throughput ratio (acceptance: paged ≥ 1.3x), the prefix hit rate, and
+  resident KV bytes per context token.
 
 Writes ``BENCH_serving.json`` (or ``--smoke`` scale for the CI bench
 gate, compared against the committed baseline by
@@ -318,13 +326,109 @@ def bench_prefill_tail(smoke: bool = False, repeats: int = 6,
     return out
 
 
+def shared_prefix_workload(smoke: bool):
+    """Serial chat turns: one long shared system prompt + a short distinct
+    user suffix per turn. Serving this contiguously re-prefills the system
+    prompt every turn; the paged backend prefills it once and reuses its
+    registered blocks for every later turn."""
+    del smoke
+    sys_len, turns, sfx, new = 512, 8, 8, 8
+    rng = np.random.default_rng(11)
+    sys_prompt = [int(t) for t in rng.integers(1, 200, size=sys_len)]
+    reqs = [Request(prompt=sys_prompt
+                    + [int(t) for t in rng.integers(1, 200, size=sfx)],
+                    max_new_tokens=new, request_id=i)
+            for i in range(turns)]
+    return reqs, sys_len
+
+
+def bench_shared_prefix(smoke: bool = False, repeats: int = 3,
+                        report=print) -> Dict:
+    """Paged-vs-contiguous on the shared-prefix workload. Both backends run
+    the continuous scheduler with one slot and serve the turns serially
+    (one ``generate`` per turn, the arrival pattern of a chat session), so
+    each turn's prompt sits at positions ``0..L-1`` in both backends and
+    greedy tokens must be bit-identical. Fixed-size at every scale (like
+    ``bench_prefill_tail``), on the FLOPs-bound ``_tail_model`` width: the
+    experiment measures prefill *avoidance*, and at toy widths a 500-token
+    prefill is pure dispatch overhead — shrinking it would measure the
+    paged backend's extra gather/scatter dispatches instead."""
+    model, params = _tail_model()
+    reqs, sys_len = shared_prefix_workload(smoke)
+    max_len, bs = 768, 16
+    ctx_len = len(reqs[0].prompt) + reqs[0].max_new_tokens
+    new_tokens = sum(r.max_new_tokens for r in reqs)
+    out: Dict = {"turns": len(reqs), "system_prompt_len": sys_len,
+                 "context_len": ctx_len, "block_size": bs}
+    tokens: Dict[str, List] = {}
+    for backend in ("contiguous", "paged"):
+        over = {} if backend == "contiguous" else dict(
+            kv_backend="paged", block_size=bs,
+            kv_blocks=2 * (max_len // bs) + 1)
+        eng = ServeEngine(model, params,
+                          ServeConfig(max_batch=1, max_len=max_len,
+                                      scheduler="continuous", **over))
+
+        def turns(eng=eng, reqs=reqs):
+            return [eng.generate([r])[0] for r in reqs]
+
+        turns()                 # warm every jit shape + the block registry
+        kv0 = eng.scheduler.stats()["kv"]
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            outs = turns()
+            best = min(best, time.perf_counter() - t0)
+        kv = eng.scheduler.stats()["kv"]
+        eng.close()
+        tokens[backend] = [o.tokens for o in outs]
+        m = {"tok_s": new_tokens / best, "wall_ms": best * 1e3,
+             "turn_ms": best * 1e3 / len(reqs)}
+        if backend == "paged":
+            timed = repeats * len(reqs)
+            m["prefix_hit_rate"] = \
+                (kv["prefix_hits"] - kv0["prefix_hits"]) / timed
+            m["prefix_tokens_reused_per_turn"] = \
+                (kv["prefix_tokens_reused"]
+                 - kv0["prefix_tokens_reused"]) / timed
+            m["cow_copies"] = kv["cow_copies"]
+            per_pos = kv["block_bytes"] // bs
+            m["kv_bytes_per_ctx_token"] = \
+                kv["peak_blocks_active"] * kv["block_bytes"] / ctx_len
+        else:
+            # one contiguous slot always holds max_len positions
+            per_pos = None
+            m["kv_bytes_per_ctx_token"] = None
+        out[backend] = m
+        if per_pos is not None:
+            out["contiguous"]["kv_bytes_per_ctx_token"] = \
+                per_pos * max_len / ctx_len
+        report(f"[serving] shared-prefix {backend:10s}: "
+               f"{m['tok_s']:7.0f} tok/s ({m['turn_ms']:.1f} ms/turn)")
+    out["tokens_identical"] = tokens["paged"] == tokens["contiguous"]
+    if not out["tokens_identical"]:
+        raise RuntimeError(
+            "paged backend diverged from contiguous on the shared-prefix "
+            "workload: greedy tokens differ — the bit-identity guarantee "
+            "is broken")
+    out["ratio"] = out["paged"]["tok_s"] / out["contiguous"]["tok_s"]
+    report(f"[serving] shared-prefix paged/contiguous ratio: "
+           f"{out['ratio']:.2f}x (hit rate "
+           f"{out['paged']['prefix_hit_rate']:.2f}, "
+           f"{out['paged']['prefix_tokens_reused_per_turn']:.0f} prefix "
+           f"tokens reused/turn, tokens bit-identical)")
+    return out
+
+
 def run(report=print, smoke: bool = False,
         out_path: str = "BENCH_serving.json") -> Dict:
     results = {"smoke": smoke,
                "throughput": bench_throughput(smoke=smoke, report=report),
                "reload": bench_reload_dip(smoke=smoke, report=report),
                "prefill_tail": bench_prefill_tail(smoke=smoke,
-                                                  report=report)}
+                                                  report=report),
+               "shared_prefix": bench_shared_prefix(smoke=smoke,
+                                                    report=report)}
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
     report(f"[serving] wrote {out_path}")

@@ -8,13 +8,16 @@ the chunked/monolithic p99 step-time ratio) and fixed-size latencies are
 compared, and tolerances are deliberately generous — the gate exists to
 catch >2x regressions (a scheduler that stopped batching, a stall
 serializing the swap path, chunked prefill that stopped bounding the
-admission spike), not wall-clock noise across runners. Two hard floors are
-absolute: chunked greedy tokens must stay bit-identical to the monolithic
-path, and the *committed baseline's* chunked/monolithic p99 ratio must
-stay at or under 0.5x (the acceptance bar the chunked-prefill PR landed —
-re-committing a degraded baseline fails the gate; the fresh run gets the
-usual 2x tolerance against it). Fresh JSONs are written to ``--out-dir``
-and uploaded as CI artifacts by the ``bench-gate`` job.
+admission spike, a paged KV cache that stopped reusing prefixes), not
+wall-clock noise across runners. Some hard floors are absolute: chunked
+greedy tokens must stay bit-identical to the monolithic path and paged
+tokens to the contiguous backend; the *committed baseline's*
+chunked/monolithic p99 ratio must stay at or under 0.5x and its
+shared-prefix paged/contiguous throughput ratio at or above 1.3x (the
+acceptance bars those PRs landed — re-committing a degraded baseline
+fails the gate; the fresh runs get the usual generous tolerance against
+it). Fresh JSONs are written to ``--out-dir`` and uploaded as CI
+artifacts by the ``bench-gate`` job.
 
 Usage: PYTHONPATH=src python scripts/check_bench.py [--out-dir DIR]
 """
@@ -103,6 +106,24 @@ def main() -> None:
     check("serving.prefill-tail.p99-ratio", ratio <= cap,
           f"chunked/monolithic p99 step-time {ratio:.2f}x "
           f"(baseline {base_ratio:.2f}x, cap {cap:.2f}x)")
+
+    # --- serving: paged KV must keep paying for itself on shared prefixes
+    fs, bs_ = fresh_serving["shared_prefix"], base_serving["shared_prefix"]
+    check("serving.shared-prefix.tokens-identical", fs["tokens_identical"],
+          "paged greedy tokens vs contiguous backend")
+    check("serving.shared-prefix.hit-rate",
+          fs["paged"]["prefix_hit_rate"] > 0,
+          f"prefix hit rate {fs['paged']['prefix_hit_rate']:.2f}")
+    # the committed baseline must keep the acceptance bar (>= 1.3x) the
+    # paged-KV PR landed — re-committing a degraded baseline fails the
+    # gate; the fresh run is held to the usual structural floor
+    ratio, base_ratio = fs["ratio"], bs_["ratio"]
+    check("serving.shared-prefix.baseline-acceptance", base_ratio >= 1.3,
+          f"committed paged/contiguous ratio {base_ratio:.2f}x (bar 1.30x)")
+    floor = min(base_ratio / 2, 1.05)
+    check("serving.shared-prefix.ratio", ratio >= floor,
+          f"paged/contiguous {ratio:.2f}x (baseline {base_ratio:.2f}x, "
+          f"floor {floor:.2f}x)")
 
     # --- reload: staging/swap latency on the fixed-size workloads --------
     for wl in ("toy_cnn", "reduced_lm"):

@@ -294,22 +294,42 @@ _CACHE_LOGICAL: Dict[str, Tuple] = {
     "enc_out": ("batch", None, None),
 }
 
+# Paged pools put K/V in (num_blocks, block_size, kv_heads, head_dim):
+# the pool dim takes the DP axes (each device holds a slice of the block
+# pool — the paged analogue of sequence parallelism; block tables index
+# logically so the gather reshards transparently under GSPMD), while the
+# tiny block_size dim is never split.
+_PAGED_CACHE_LOGICAL: Dict[str, Tuple] = {
+    "k":       ("kv_blocks", None, "kv_heads", "head_dim"),
+    "v":       ("kv_blocks", None, "kv_heads", "head_dim"),
+    "k_scale": ("kv_blocks", None, "kv_heads"),
+    "v_scale": ("kv_blocks", None, "kv_heads"),
+}
+
 _CACHE_RULES = AxisRules(rules=(
     # long-context SP: the cache sequence dim takes whatever DP axes the
     # (possibly tiny) batch left unused — 500k decode shards its KV over them
     ("seq_cache", (("pod", "data"), ("data",), None)),
+    ("kv_blocks", (("pod", "data"), ("data",), None)),
     ("mla_rank",  (("model",), None)),
     ("d_inner",   (("model",), None)),
     ("head_dim",  (("model",), None)),
 ) + AxisRules().rules)
 
 
-def make_cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+def make_cache_shardings(mesh: Mesh, cache_shape: Any,
+                         paged: bool = False) -> Any:
+    table = _PAGED_CACHE_LOGICAL if paged else _CACHE_LOGICAL
+
     def one(keypath, leaf):
         path = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
                      for k in keypath)
         name = path[-1] if path else ""
-        logical = _CACHE_LOGICAL.get(name, (None,) * len(leaf.shape))
+        logical = table.get(name)
+        if logical is None and paged:
+            logical = _CACHE_LOGICAL.get(name)
+        if logical is None:
+            logical = (None,) * len(leaf.shape)
         if len(logical) != len(leaf.shape):
             stack = len(leaf.shape) - len(logical)
             logical = (None,) * stack + tuple(logical)

@@ -1,0 +1,175 @@
+"""Paged gather-attention decode kernel: one new query token per slot
+attends over K/V read *through a block table* from a shared block pool.
+
+Layout (what :class:`repro.serving.kvcache.PagedKVCache` feeds in):
+
+* ``k_pool``/``v_pool``: ``(num_blocks, block_size, KV, D)`` — the pool.
+* ``block_tables``: ``(B, nb)`` int32 — per-slot physical block ids, in
+  logical order; unused tail entries point at the reserved trash block 0.
+* ``lengths``: ``(B,)`` int32 — each slot's current absolute position
+  (the new token's position; K/V for it are already written), so the
+  kernel masks columns ``> lengths[b]``. No left-padding: slot ``b`` pays
+  attention only over its own ``lengths[b] + 1`` real positions.
+
+The Pallas kernel gathers one ``(block_size, D)`` K/V tile per grid step
+into VMEM via scalar-prefetched block-table indexing (the BlockSpec
+index_map reads ``block_tables`` directly, so the DMA fetches exactly the
+blocks the slot owns) and accumulates a numerically-stable online softmax
+per (slot, kv-head). The reference backend materializes the same gather
+with jnp indexing and runs the exact grouped einsum the contiguous decode
+path uses — it is the CPU serving oracle and the bit-identity anchor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30   # finite: exp(NEG_INF - m) underflows to exactly 0.0
+
+__all__ = ["paged_attention", "paged_attention_ref"]
+
+
+# ---------------------------------------------------------------------------
+# reference backend (the serving oracle on CPU)
+# ---------------------------------------------------------------------------
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                        scale: float) -> jnp.ndarray:
+    """q: (B, H, D); pools: (N, bs, KV, D); block_tables: (B, nb);
+    lengths: (B,). Returns (B, H, D).
+
+    Gathers each slot's blocks to a contiguous (B, nb*bs, KV, D) view and
+    runs the same grouped einsum as the contiguous decode path
+    (``models.attention._grouped_attention``), so greedy tokens stay
+    bit-identical to the contiguous oracle when ``nb*bs == max_len``:
+    masked columns hold finite garbage whose scores are pushed to
+    ``NEG_INF`` and contribute exact zeros after softmax.
+    """
+    b, h, d = q.shape
+    kv = k_pool.shape[2]
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    t = nb * bs
+    kc = k_pool[block_tables].reshape(b, t, kv, d).astype(q.dtype)
+    vc = v_pool[block_tables].reshape(b, t, kv, d).astype(q.dtype)
+    valid = jnp.arange(t)[None, :] <= lengths[:, None]
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    mask = mask[:, None, None, None, :]                 # (B,1,1,S=1,T)
+    rep = h // kv
+    qg = q[:, None].reshape(b, 1, kv, rep, d)
+    scores = jnp.einsum("bskrd,btkd->bkrst", qg, kc) * scale
+    scores = scores.astype(jnp.float32)
+    scores = scores + mask
+    p = jax.nn.softmax(scores, axis=-1).astype(vc.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", p, vc)
+    return out.reshape(b, 1, h, d)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+_LANES = 128   # replicate the (rep,) softmax stats across one vreg of lanes
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, block_size: int,
+                         scale: float):
+    """Grid (B, KV, nb); one (block_size, D) K/V tile per step, online
+    softmax accumulated across the nb (innermost, sequential) axis."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (rep, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bs, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bs, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    cols = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)                         # (rep, bs)
+    s = jnp.where(cols <= len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (rep, LANES)
+    m_blk = jnp.max(s, axis=1, keepdims=True)          # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_blk, m_prev.shape))
+    alpha = jnp.exp(m_prev - m_new)                    # lane-replicated
+    p = jnp.exp(s - m_new[:, :1])                      # (rep, bs)
+    l_new = alpha * l_ref[...] + jnp.broadcast_to(
+        jnp.sum(p, axis=1, keepdims=True), m_prev.shape)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, :1] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == nb - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _paged_attention_pallas(q, k_pool, v_pool, block_tables, lengths, *,
+                            scale: float, interpret: bool):
+    b, h, d = q.shape
+    n, bs, kv, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    rep = h // kv
+    qg = q.reshape(b, kv, rep, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d),
+                         lambda bi, hi, ji, bt, ln: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, hi, ji, bt, ln: (bt[bi, ji], 0, hi, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, hi, ji, bt, ln: (bt[bi, ji], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda bi, hi, ji, bt, ln: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, _LANES), jnp.float32),
+            pltpu.VMEM((rep, _LANES), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, block_size=bs,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_pool, v_pool)
+    return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# public dispatch (same policy as kernels.ops)
+# ---------------------------------------------------------------------------
+
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    scale: float, use_pallas: str = "auto") -> jnp.ndarray:
+    """Block-table decode attention. ``use_pallas``: 'auto' (TPU→pallas,
+    CPU→ref), 'ref', 'pallas', or 'interpret' (kernel body on CPU)."""
+    if use_pallas == "auto":
+        use_pallas = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use_pallas in ("pallas", "interpret"):
+        return _paged_attention_pallas(
+            q, k_pool, v_pool, block_tables, lengths, scale=scale,
+            interpret=(use_pallas == "interpret"))
+    return paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                               scale=scale)

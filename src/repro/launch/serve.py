@@ -21,6 +21,13 @@ drains admission and swaps at a step boundary (force-swap after
 
     python -m repro.launch.serve --scheduler continuous --max-slots 8 \
         --quantize squant --bits 8 --reload-from /tmp/ckpts
+
+Paged KV cache (``--kv-backend paged``): block-pool KV with per-slot block
+tables, shared-prefix reuse and copy-on-write — many requests carrying the
+same system prompt prefill it once:
+
+    python -m repro.launch.serve --scheduler continuous --max-slots 8 \
+        --kv-backend paged --block-size 16 --prompts "hi" "hi there"
 """
 from __future__ import annotations
 
@@ -63,6 +70,20 @@ def main():
                          "resident slots keep decoding, bounding the "
                          "step-time spike a long-prompt admission causes "
                          "(0: monolithic prefill)")
+    ap.add_argument("--kv-backend", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV-cache layout: contiguous (one cache row per "
+                         "slot) or paged (continuous only: block pool + "
+                         "per-slot block tables with shared-prefix reuse "
+                         "and copy-on-write — repeated system prompts "
+                         "prefill once)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: positions per KV block (must divide "
+                         "max_len)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged: physical blocks in the pool incl. the "
+                         "trash block (0: full capacity, no admission "
+                         "backpressure)")
     ap.add_argument("--prompts", nargs="*", default=["hello world"])
     ap.add_argument("--reload-from", default=None, metavar="CKPT_DIR",
                     help="watch this checkpoint dir and hot-swap new "
@@ -89,7 +110,10 @@ def main():
                                   scheduler=args.scheduler,
                                   max_slots=args.max_slots,
                                   swap_deadline_ms=deadline,
-                                  prefill_chunk=args.prefill_chunk))
+                                  prefill_chunk=args.prefill_chunk,
+                                  kv_backend=args.kv_backend,
+                                  block_size=args.block_size,
+                                  kv_blocks=args.kv_blocks))
     if eng.quant_report:
         print("[serve]", eng.quant_report.summary())
     if args.reload_from:
@@ -122,6 +146,13 @@ def main():
                   f"(prefill_chunk={sch['prefill_chunk']}, "
                   f"{sch['chunk_steps']} chunk forwards, "
                   f"{sch['pendings_abandoned']} abandoned)")
+        kv = sch["kv"]
+        if kv.get("backend") == "paged":
+            print(f"[serve] paged kv: {kv['blocks_total']} blocks x "
+                  f"{kv['block_size']} (peak {kv['peak_blocks_active']} "
+                  f"active), prefix hits={kv['prefix_hits']} "
+                  f"({kv['prefix_tokens_reused']} tokens reused), "
+                  f"cow={kv['cow_copies']} evictions={kv['evictions']}")
     for err in w["errors"]:
         print(f"[serve] reload error: {err}")
     eng.close()

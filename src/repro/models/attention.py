@@ -243,7 +243,8 @@ def causal_mask(s: int, t: Optional[int] = None,
 # ---------------------------------------------------------------------------
 
 def attention(params, x, *, cfg, rope, mode: str = "train",
-              cache: Optional[dict] = None, pos: Optional[jnp.ndarray] = None
+              cache: Optional[dict] = None, pos: Optional[jnp.ndarray] = None,
+              block_tables: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Self-attention.
 
@@ -253,6 +254,12 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
     absolute position ``pos``, attending over the already-filled cache
     prefix — the same repeated-KV einsum as prefill, so the chunked path's
     activations match the monolithic prefill bit-for-bit).
+
+    ``block_tables`` switches decode to the paged layout: the cache leaves
+    are a block pool ``(num_blocks, block_size, KV, D)`` shared by all
+    slots, ``pos`` is a per-slot length vector ``(B,)``, and each slot's
+    K/V is reached through its ``block_tables`` row (no left-padding; see
+    :mod:`repro.kernels.paged_attention`).
     """
     if cfg.mla is not None:
         if mode == "chunk":
@@ -299,6 +306,25 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
                                  scale=scale, causal=True, window=None,
                                  q_chunk=cfg.attn_q_chunk,
                                  unroll=cfg.unroll_chunks, row0=pos)
+    elif block_tables is not None:  # paged decode: s == 1, pos is (B,)
+        # write the new K/V row through the table (slot b's token lands in
+        # physical block ``bt[b, pos//bs]`` at offset ``pos % bs``; retired
+        # slots point at the trash block and are masked out by length),
+        # then attend via the gather kernel — exact-zero contributions from
+        # masked columns keep tokens bit-identical to the contiguous
+        # oracle at equal effective context (nb * bs == max_len)
+        from repro.kernels.paged_attention import paged_attention
+        bs_blk = cache["k"].shape[1]
+        rows = jnp.arange(b)
+        phys = block_tables[rows, pos // bs_blk]
+        off = pos % bs_blk
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[phys, off].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[phys, off].set(
+            v[:, 0].astype(cache["v"].dtype))
+        out = paged_attention(q[:, 0], cache["k"], cache["v"],
+                              block_tables, pos, scale=scale)[:, None]
     else:  # decode: s == 1, absolute position ``pos``
         cache = _cache_write(cache, k, v, pos, cfg.window)
         kc, vc = _cache_read(cache)

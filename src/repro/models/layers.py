@@ -93,12 +93,18 @@ def rotary_tables(head_dim: int, max_len: int, theta: float = 10000.0,
 
 def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
                  ) -> jnp.ndarray:
-    """x: (..., S, H, D); cos/sin: (S, D/2) (broadcast over heads).
-    cos/sin cast to x.dtype so rotary never promotes bf16 activations."""
+    """x: (B, S, H, D); cos/sin: (S, D/2) shared across the batch, or
+    (B, S, D/2) per-row (paged decode: each slot sits at its own absolute
+    position). cos/sin cast to x.dtype so rotary never promotes bf16
+    activations."""
     d2 = x.shape[-1] // 2
     x1, x2 = x[..., :d2], x[..., d2:]
-    c = cos.astype(x.dtype)[None, :, None, :]
-    s = sin.astype(x.dtype)[None, :, None, :]
+    if cos.ndim == 3:
+        c = cos.astype(x.dtype)[:, :, None, :]
+        s = sin.astype(x.dtype)[:, :, None, :]
+    else:
+        c = cos.astype(x.dtype)[None, :, None, :]
+        s = sin.astype(x.dtype)[None, :, None, :]
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
 
 

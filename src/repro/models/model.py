@@ -77,9 +77,14 @@ class LM:
                 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
         tokens = batch["tokens"]
         b, s = tokens.shape
+        block_tables = caches.get("block_tables") \
+            if caches is not None else None
         if mode == "decode":
             pos = caches["pos"]
-            positions = pos[None]
+            # contiguous caches keep ONE scalar clock for the whole batch;
+            # paged caches keep a per-slot length vector, so each row gets
+            # its own absolute position (rope shapes follow suit)
+            positions = pos[None] if pos.ndim == 0 else pos[:, None]
         elif mode == "chunk":
             # partial-prefill continuation: the cache clock is the chunk's
             # start offset; rows live at absolute positions pos..pos+s-1
@@ -96,9 +101,12 @@ class LM:
             enc_out = self._encode(params, batch)
         x, new_caches, aux = apply_stack(
             params["stack"], x, cfg=self.cfg, rope=rope, mode=mode,
-            caches=caches, pos=pos, enc_out=enc_out)
+            caches=caches, pos=pos, enc_out=enc_out,
+            block_tables=block_tables)
         if new_caches is not None:
             new_caches["pos"] = pos + s
+            if block_tables is not None:
+                new_caches["block_tables"] = block_tables
             if enc_out is not None:
                 new_caches["enc_out"] = enc_out
         logits = self._logits(params, x)

@@ -29,9 +29,13 @@ from repro.models.layers import init_norm, rms_norm
 
 def rope_values(positions: jnp.ndarray, rope_dim: int, theta: float,
                 dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (S,) shared across the batch, or (B, S) per-row (paged
+    decode). Returns cos/sin of shape ``positions.shape + (rope_dim//2,)``;
+    the per-position multiply is identical either way, so a row at absolute
+    position p gets bit-identical rotary values through both shapes."""
     inv = 1.0 / (theta ** (jnp.arange(0, rope_dim, 2, dtype=jnp.float32)
                            / rope_dim))
-    freqs = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    freqs = positions.astype(jnp.float32)[..., None] * inv
     return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
 
 
@@ -76,7 +80,8 @@ def init_block(key, cfg, kind: str, use_moe: bool,
 
 def apply_block(p, x, *, cfg, kind: str, use_moe: bool, rope, mode: str,
                 cache: Optional[dict], pos,
-                enc_out: Optional[jnp.ndarray] = None
+                enc_out: Optional[jnp.ndarray] = None,
+                block_tables: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
     """Returns (x, new_cache, moe_aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -106,7 +111,8 @@ def apply_block(p, x, *, cfg, kind: str, use_moe: bool, rope, mode: str,
     if kind == "a":
         h, new_cache = attn_lib.attention(
             p["attn"], rms_norm(p["ln1"], x, plus_one=cfg.norm_plus_one),
-            cfg=cfg, rope=rope, mode=mode, cache=cache, pos=pos)
+            cfg=cfg, rope=rope, mode=mode, cache=cache, pos=pos,
+            block_tables=block_tables)
     else:  # mamba
         h, new_cache = mamba_lib.mamba(
             p["mixer"], rms_norm(p["ln1"], x, plus_one=cfg.norm_plus_one),
@@ -233,7 +239,8 @@ def init_cache(cfg, batch: int, max_len: int, quantize_kv: bool = False,
 
 
 def apply_stack(stack, x, *, cfg, rope, mode: str, caches, pos,
-                enc_out: Optional[jnp.ndarray] = None
+                enc_out: Optional[jnp.ndarray] = None,
+                block_tables: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
     """Run all layers. Returns (x, new_caches, moe_aux_mean)."""
     pattern = layer_plan(cfg)
@@ -245,7 +252,8 @@ def apply_stack(stack, x, *, cfg, rope, mode: str, caches, pos,
             c_in = None if pcache is None else pcache.get(f"b{i}")
             xin, c_out, aux = apply_block(
                 pp[f"b{i}"], xin, cfg=cfg, kind=kind, use_moe=moe, rope=rope,
-                mode=mode, cache=c_in, pos=pos, enc_out=enc_out)
+                mode=mode, cache=c_in, pos=pos, enc_out=enc_out,
+                block_tables=block_tables)
             aux_sum += aux
             if c_out is not None:
                 new_c[f"b{i}"] = c_out

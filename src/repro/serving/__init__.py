@@ -1,8 +1,11 @@
 """Batched serving engine (round or continuous-batching slot scheduler)
-with quantized-weight and quantized-KV paths, backed by a versioned
+with quantized-weight and quantized-KV paths, a first-class KV-cache API
+(contiguous or paged-with-prefix-reuse), backed by a versioned
 hot-reloadable weight store."""
 from repro.serving.engine import (ServeEngine, ServeConfig,  # noqa: F401
                                   Request, Completion)
+from repro.serving.kvcache import (KVCache,  # noqa: F401
+                                   ContiguousKVCache, PagedKVCache)
 from repro.serving.scheduler import (RoundScheduler,  # noqa: F401
                                      ContinuousScheduler)
 from repro.serving.weights import (WeightStore,  # noqa: F401

@@ -19,6 +19,14 @@ Scheduling lives in :mod:`repro.serving.scheduler`:
   resident slots keep decoding, bounding per-step tail latency (greedy
   tokens stay bit-identical to the monolithic path at equal padding).
 
+KV-cache layout is a separate axis (``kv_backend``, see
+:mod:`repro.serving.kvcache`): ``"contiguous"`` keeps the one-cache-row-
+per-slot layout; ``"paged"`` (continuous scheduler only) stores K/V in
+fixed-size blocks behind per-slot block tables with refcounted shared-
+prefix reuse and copy-on-write — repeated system prompts prefill once,
+and admission is bounded by a block budget instead of the shared clock
+horizon.
+
 Weight ownership lives in :class:`repro.serving.weights.WeightStore`, not
 the engine: schedulers *acquire* a weight version at their swap points and
 pin it per round / per slot, so a concurrent reload can never tear an
@@ -34,8 +42,9 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 
+from repro.serving.kvcache import admit_rows
 from repro.serving.scheduler import (Completion, ContinuousScheduler,
-                                     Request, RoundScheduler, admit_rows)
+                                     Request, RoundScheduler)
 from repro.serving.weights import WeightStore, make_weight_pipeline
 
 __all__ = ["ServeConfig", "Request", "Completion", "ServeEngine"]
@@ -68,6 +77,56 @@ class ServeConfig:
     # with-skip would otherwise starve a long request behind a stream of
     # short ones that keeps the pool from ever emptying)
     starvation_limit: int = 32
+    # KV-cache backend (see repro.serving.kvcache): 'contiguous' is the
+    # original one-cache-row-per-slot layout; 'paged' (continuous scheduler
+    # only) stores K/V in fixed-size blocks behind per-slot block tables
+    # with shared-prefix reuse and copy-on-write
+    kv_backend: str = "contiguous"
+    # paged only: positions per KV block; must divide max_len (the per-slot
+    # table then spans exactly max_len positions, keeping paged decode
+    # shape- and bit-compatible with the contiguous oracle)
+    block_size: int = 16
+    # paged only: physical blocks in the pool, including the reserved trash
+    # block (0: full capacity, max_slots * (max_len // block_size) + 1 —
+    # no admission backpressure; smaller pools admit under a block budget)
+    kv_blocks: int = 0
+
+    def __post_init__(self):
+        if self.prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
+        if self.prefill_chunk and self.quantize_kv:
+            raise NotImplementedError(
+                "chunked prefill with quantized KV caches is not "
+                "supported: chunk continuations would attend to "
+                "dequantized prefix keys, breaking the bit-exact "
+                "equivalence with the monolithic prefill")
+        if self.kv_backend not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_backend {self.kv_backend!r} "
+                             "(expected 'contiguous' or 'paged')")
+        if self.kv_backend == "paged":
+            if self.scheduler != "continuous":
+                raise NotImplementedError(
+                    "the paged KV cache requires scheduler='continuous' "
+                    "(the round scheduler's per-round caches are "
+                    "contiguous by construction)")
+            if self.quantize_kv:
+                raise NotImplementedError(
+                    "the paged KV cache does not support quantized KV "
+                    "caches yet (block gather would mix per-row scales)")
+            if self.prefill_chunk:
+                raise NotImplementedError(
+                    "the paged KV cache is gated to monolithic admission "
+                    "prefill for now; set prefill_chunk=0 (see ROADMAP)")
+            if self.block_size < 1:
+                raise ValueError("block_size must be >= 1")
+            if self.max_len % self.block_size:
+                raise ValueError(
+                    f"block_size ({self.block_size}) must divide max_len "
+                    f"({self.max_len}): the per-slot block table must span "
+                    "exactly max_len positions for bit-compatibility with "
+                    "the contiguous backend")
+            if self.kv_blocks < 0:
+                raise ValueError("kv_blocks must be >= 0")
 
 
 class ServeEngine:

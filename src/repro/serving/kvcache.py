@@ -1,0 +1,717 @@
+"""First-class KV-cache API for the serving engine.
+
+Everything the schedulers used to do to cache dicts by hand — allocation
+(``model.init_cache``), the decode-position clock (``cache["pos"]``
+poking), admission side caches, row scatter (``admit_rows``) — is owned
+here, behind one interface with two backends:
+
+* :class:`ContiguousKVCache` — the original layout: ONE ``max_slots``-row
+  cache, slot = cache row, a single scalar clock shared by every slot,
+  prompts left-padded to the clock at admission. It wraps the exact same
+  jitted calls the scheduler used to make, so it is the bit-exactness
+  oracle (and the trace-count behavior is unchanged).
+
+* :class:`PagedKVCache` — vLLM-style paging: K/V live in a pool of
+  fixed-size blocks; each slot reaches its tokens through a per-slot
+  block table, with a free-block pool, refcounts, and copy-on-write.
+  Prompts are *not* left-padded: slot ``b``'s tokens sit at absolute
+  positions ``0..L-1`` with a per-slot length vector as the clock, which
+  removes the contiguous backend's ``clock + max_new <= max_len``
+  admission horizon (a long-budget request no longer has to fit under the
+  shared clock — only under its own ``prompt + max_new <= max_len``).
+
+Shared-prefix reuse (paged): admitted prompts are chain-hashed at block
+granularity; full blocks whose hash (and content — hashes are verified
+against stored tokens) matches a registered block are *shared* into the
+new slot's table with a refcount bump, and the admission prefill shrinks
+to the unshared suffix (a ``prefill_chunk`` continuation over the
+gathered prefix, bit-identical to the monolithic prefill by the chunked-
+prefill equivalence). A partially-filled tail block can also be shared
+for its values; any write into a block with live sharers triggers
+copy-on-write — the slot gets a private physical block before the write
+lands (``cow_copies`` counts these). Retired slots' blocks drop their
+refs; registered blocks park in a reclaimable cached set (evicted FIFO
+when the free list runs dry) instead of being freed, so one 512-token
+system prompt prefills once across thousands of short turns.
+
+Physical block 0 is reserved as the *trash block*: retired slots' table
+rows point at it, so the lockstep decode batch (which writes one K/V row
+per slot unconditionally) can never corrupt a live block.
+
+Admission reserves the full ``ceil((len(prompt) + max_new) / block_size)``
+block budget up front (allocated lazily as decode crosses block
+boundaries), so a request that is admitted can always finish: pool
+exhaustion surfaces as admission backpressure, never as a mid-decode
+failure.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRASH = 0   # reserved physical block: write target for retired slots
+
+__all__ = ["KVCache", "ContiguousKVCache", "PagedKVCache", "admit_rows"]
+
+
+# ---------------------------------------------------------------------------
+# jitted cache ops (pure functions; the engine wraps them in trace counters)
+# ---------------------------------------------------------------------------
+
+def admit_rows(pool, tmp, pool_logits, tmp_logits, idx):
+    """Scatter a ``k``-row prefill cache + its last-token logits into the
+    ``max_slots``-row pool at slot indices ``idx``.
+
+    Cache leaves are batch-leading except scan-stacked period caches
+    (``(periods, batch, ...)`` — batch at axis 1) and the scalar ``pos``,
+    which the admission prefill computed for the new clock and which simply
+    replaces the pool's (both equal the clock while slots are in flight; on
+    a fresh wave it rewinds the pool).
+    """
+    out = dict(pool)
+
+    def rows0(a, b):
+        return a.at[idx].set(b.astype(a.dtype))
+
+    def rows1(a, b):
+        return a.at[:, idx].set(b.astype(a.dtype))
+
+    for key in pool:
+        if key == "pos":
+            continue
+        out[key] = jax.tree_util.tree_map(
+            rows1 if key == "periods" else rows0, pool[key], tmp[key])
+    out["pos"] = tmp["pos"]
+    return out, pool_logits.at[idx].set(tmp_logits.astype(pool_logits.dtype))
+
+
+def gather_blocks(side, pool, phys):
+    """Copy pool blocks ``phys`` (logical order, ``(n,)`` int32) into the
+    first ``n * block_size`` positions of the 1-row contiguous ``side``
+    cache — the admission-side materialization of a shared prefix."""
+    out = dict(side)
+
+    def g0(s, p):                                  # batch-leading leaves
+        blk = p[phys]                              # (n, bs, ...)
+        flat = blk.reshape((1, -1) + blk.shape[2:]).astype(s.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(s, flat, 0, 1)
+
+    def g1(s, p):                                  # (periods, batch, ...)
+        blk = p[:, phys]
+        flat = blk.reshape((blk.shape[0], 1, -1)
+                           + blk.shape[3:]).astype(s.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(s, flat, 0, 2)
+
+    for key in ("periods", "list"):
+        if key in pool:
+            out[key] = jax.tree_util.tree_map(
+                g1 if key == "periods" else g0, side[key], pool[key])
+    return out
+
+
+def scatter_blocks(pool, side, phys, start):
+    """Write side-cache positions ``[start*bs, (start+n)*bs)`` into pool
+    blocks ``phys`` (``(n,)`` int32; ``start`` may be traced)."""
+    out = dict(pool)
+    n = phys.shape[0]
+
+    def s0(p, s):
+        bs = p.shape[1]
+        seg = jax.lax.dynamic_slice_in_dim(s, start * bs, n * bs, 1)
+        return p.at[phys].set(
+            seg.reshape((n, bs) + seg.shape[2:]).astype(p.dtype))
+
+    def s1(p, s):
+        bs = p.shape[2]
+        seg = jax.lax.dynamic_slice_in_dim(s, start * bs, n * bs, 2)
+        return p.at[:, phys].set(
+            seg.reshape((seg.shape[0], n, bs) + seg.shape[3:])
+            .astype(p.dtype))
+
+    for key in ("periods", "list"):
+        if key in pool:
+            out[key] = jax.tree_util.tree_map(
+                s1 if key == "periods" else s0, pool[key], side[key])
+    return out
+
+
+def copy_block(pool, src, dst):
+    """Pool-to-pool block copy (decode-time copy-on-write)."""
+    out = dict(pool)
+
+    def c0(p):
+        return p.at[dst].set(p[src])
+
+    def c1(p):
+        return p.at[:, dst].set(p[:, src])
+
+    for key in ("periods", "list"):
+        if key in pool:
+            out[key] = jax.tree_util.tree_map(
+                c1 if key == "periods" else c0, pool[key])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# interface
+# ---------------------------------------------------------------------------
+
+class KVCache:
+    """Backend-neutral KV-cache state owned on behalf of a scheduler.
+
+    Use :meth:`create` (reads ``ServeConfig.kv_backend``); schedulers talk
+    to the returned object and never touch cache dicts or ``cache["pos"]``
+    directly — the decode position is the read-only :attr:`clock`.
+    """
+
+    backend = "abstract"
+
+    def __init__(self, engine):
+        self.eng = engine
+        self.cfg = engine.cfg
+        self.model = engine.model
+        self.max_slots = engine.cfg.max_slots or engine.cfg.max_batch
+        self._cache = None            # persistent pool cache (lazy init)
+        self._logits = None           # (max_slots, vocab) pending logits
+        # admission side caches, keyed by row count and reused across
+        # admissions: a fresh allocation per admission owned the admission
+        # step's latency at small scales. Stale rows are harmless — every
+        # position is rewritten before any masked-in read, and masked
+        # columns contribute exact zeros — only the clock is rewound.
+        self._side_caches: Dict[int, Any] = {}
+
+    @staticmethod
+    def create(engine) -> "KVCache":
+        """The one serving entry point for cache construction (unifies the
+        old ``models.model.LM.init_cache`` / ``models.transformer.
+        init_cache`` call sites and the ``quantize_kv`` flag)."""
+        backend = getattr(engine.cfg, "kv_backend", "contiguous")
+        if backend == "paged":
+            return PagedKVCache(engine)
+        return ContiguousKVCache(engine)
+
+    # ------------------------------------------------------------- plumbing
+    def fresh(self, rows: int) -> dict:
+        """A standalone contiguous cache (the round scheduler's per-round
+        cache); replaces direct ``model.init_cache`` calls in serving."""
+        return self.model.init_cache(rows, self.cfg.max_len,
+                                     quantize_kv=self.cfg.quantize_kv)
+
+    def side_cache(self, k: int) -> dict:
+        """A reusable ``k``-row admission cache with the clock rewound."""
+        cache = self._side_caches.get(k)
+        if cache is None:
+            cache = self.fresh(k)
+            self._side_caches[k] = cache
+        cache = dict(cache)
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        return cache
+
+    @property
+    def logits(self):
+        """Last-token logits per slot, sampled by the scheduler."""
+        return self._logits
+
+    def begin_run(self) -> None:
+        """Called at the top of each ``run()``."""
+
+    def check_request(self, req) -> None:
+        """Backend-specific admissibility (beyond the shared horizon)."""
+
+    def on_weight_swap(self) -> None:
+        """Invalidate weight-version-dependent cached state."""
+
+    def stats(self) -> Dict[str, Any]:
+        return {"backend": self.backend}
+
+
+# ---------------------------------------------------------------------------
+# contiguous backend (the original layout — bit-exactness oracle)
+# ---------------------------------------------------------------------------
+
+class ContiguousKVCache(KVCache):
+    """One ``max_slots``-row cache with a shared scalar clock; admission
+    left-pads prompts to the clock and scatters side-cache rows into the
+    pool (the ``admit_rows`` path). Wraps exactly the device calls the
+    continuous scheduler used to issue, so slots' greedy tokens — and the
+    engine's jit trace counts — are unchanged by the API move."""
+
+    backend = "contiguous"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self._clock = 0
+
+    @property
+    def clock(self) -> int:
+        """The shared decode position. Read-only: the clock advances via
+        :meth:`decode` and is set by admissions — direct ``cache["pos"]``
+        mutation is deprecated in favor of this property."""
+        return self._clock
+
+    def begin_run(self) -> None:
+        self._clock = 0
+
+    # ----------------------------------------------------------- admission
+    def pick(self, queue, nfree: int, fresh: bool, limit_head: bool
+             ) -> Tuple[List, Optional[int]]:
+        """Choose up to ``nfree`` queued requests admissible at the clock.
+
+        Mid-flight (``fresh=False``): FCFS with skip — a request fits iff
+        its prompt fits under the clock (``L <= clock``; the clock advances
+        one position per step, so longer prompts become admissible soon)
+        and its budget fits the cache horizon. ``limit_head`` narrows the
+        scan to the queue head (the starvation guard's anti-skip mode).
+
+        Fresh wave (``fresh=True``): the pool is empty, so the clock
+        restarts at the wave's longest admitted prompt. The queue head is
+        always admitted (its own ``L + max_new <= max_len`` was validated
+        at submit), guaranteeing progress; growing the wave re-checks every
+        already-chosen request against the raised clock so admission never
+        invalidates an earlier choice.
+        """
+        max_len = self.cfg.max_len
+        clock = self._clock
+        chosen: List = []
+        new_clock = 0 if fresh else clock
+        items = [queue[0]] if (limit_head and not fresh) else list(queue)
+        for item in items:
+            if len(chosen) >= nfree:
+                break
+            _, r = item
+            if fresh:
+                cand = max(new_clock, len(r.prompt))
+                if (cand + r.max_new_tokens <= max_len
+                        and all(cand + c.max_new_tokens <= max_len
+                                for _, c in chosen)):
+                    chosen.append(item)
+                    new_clock = cand
+            else:
+                if (len(r.prompt) <= clock
+                        and clock + r.max_new_tokens <= max_len):
+                    chosen.append(item)
+        for item in chosen:
+            queue.remove(item)
+        return chosen, new_clock
+
+    def solve_target(self, longest: int) -> Optional[int]:
+        """Committed completion clock for a mid-flight chunked admission.
+
+        The pending consumes ``chunk`` positions per engine step while
+        residents advance the clock one per step, so completing at clock
+        ``P = clock + s - 1`` after ``s`` chunk-steps requires the chunks
+        to cover all ``P`` positions (``s * chunk >= P``) and the prompt to
+        fit the padding (``P >= longest``; prompts *longer than the clock*
+        are admissible — the chunks catch up, which the monolithic path
+        cannot do at all). Returns None when no ``s`` exists (``chunk == 1``
+        against a moving clock can never catch up; such requests wait for
+        the pool to empty, where the frozen clock makes any chunk feasible).
+        """
+        clock = self._clock
+        chunk = int(self.cfg.prefill_chunk or 0)
+        s = max(1, longest - clock + 1)
+        if chunk > 1:
+            s = max(s, -(-(clock - 1) // (chunk - 1)))
+        elif clock + s - 1 > s:
+            return None
+        return clock + s - 1
+
+    def _ensure_pool(self, lg) -> None:
+        if self._cache is None:
+            self._cache = self.fresh(self.max_slots)
+            self._logits = jnp.zeros((self.max_slots, lg.shape[-1]),
+                                     lg.dtype)
+
+    def admit(self, chosen, slot_ids, clock: int, params) -> None:
+        """Monolithic admission: prefill ``chosen`` left-padded to
+        ``clock`` on a side cache and scatter the rows into the pool.
+        Blocks until the device work is done (callers time around it)."""
+        k = len(chosen)
+        tokens = np.full((k, clock), self.cfg.pad_id, np.int32)
+        for j, (_, r) in enumerate(chosen):
+            tokens[j, clock - len(r.prompt):] = np.asarray(r.prompt)
+        tmp_cache = self.side_cache(k)
+        lg, tmp_cache = self.eng._prefill(
+            params, {"tokens": jnp.asarray(tokens)}, tmp_cache)
+        self._ensure_pool(lg)
+        idx = jnp.asarray(np.asarray(slot_ids[:k], np.int32))
+        self._cache, self._logits = self.eng._admit_rows(
+            self._cache, tmp_cache, self._logits, lg, idx)
+        jax.block_until_ready(self._logits)
+        self._clock = clock
+
+    def scatter(self, pending) -> None:
+        """A completed chunked admission joins the pool: scatter its
+        side-cache rows and final-token logits at the committed clock."""
+        self._ensure_pool(pending.logits)
+        idx = jnp.asarray(np.asarray(pending.slot_ids, np.int32))
+        self._cache, self._logits = self.eng._admit_rows(
+            self._cache, pending.cache, self._logits, pending.logits, idx)
+        jax.block_until_ready(self._logits)
+        self._clock = pending.target
+
+    # -------------------------------------------------------------- decode
+    def decode(self, params, nxt, active_ids) -> None:
+        self._logits, self._cache = self.eng._decode(
+            params, nxt[:, None], self._cache)
+        self._clock += 1
+
+    def retire(self, slot_id: int) -> None:
+        """Contiguous rows are recycled implicitly (masked by position)."""
+
+    def stats(self) -> Dict[str, Any]:
+        return {"backend": self.backend, "clock": self._clock}
+
+
+# ---------------------------------------------------------------------------
+# paged backend
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(KVCache):
+    """Block-pool KV cache with per-slot block tables, prefix sharing and
+    copy-on-write. See the module docstring for the design; the invariants:
+
+    * every physical block is in exactly one of {free list, cached set
+      (ref == 0, registered, evictable), active (ref > 0)}, plus the
+      reserved trash block — asserted by ``stats()`` consumers;
+    * registered blocks are immutable: any admission or decode write into
+      a block another slot might read lands on a private copy (COW);
+    * an admitted slot can always finish: its remaining decode blocks are
+      reserved (``reserved`` outstanding count) and allocation draws from
+      the free list, then evicts cached blocks FIFO.
+    """
+
+    backend = "paged"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        cfg = self.cfg
+        self.block_size = cfg.block_size
+        self.nb_per_slot = cfg.max_len // cfg.block_size
+        self.num_blocks = cfg.kv_blocks or \
+            (self.max_slots * self.nb_per_slot + 1)
+        # host-authoritative paging state (pushed to device per decode)
+        self._tables = np.full((self.max_slots, self.nb_per_slot), TRASH,
+                               np.int32)
+        self._lengths = np.zeros((self.max_slots,), np.int32)
+        self._ref = np.zeros((self.num_blocks,), np.int32)
+        self._free: List[int] = list(range(self.num_blocks - 1, TRASH, -1))
+        self._cached: Dict[int, None] = {}     # ref==0 registered, FIFO
+        self._slot_reserved = np.zeros((self.max_slots,), np.int32)
+        self._reserved = 0
+        # prefix registry: chain hash -> (phys, block tokens) for full
+        # blocks (content-verified on match), parent hash -> (phys, fill,
+        # tokens) for one partial tail per chain position
+        self._full_map: Dict[int, Tuple[int, tuple]] = {}
+        self._hash_of: Dict[int, int] = {}
+        self._partial_map: Dict[int, Tuple[int, int, tuple]] = {}
+        self._phys_partial: Dict[int, int] = {}
+        # observability
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+        self.cow_copies = 0
+        self.evictions = 0
+        self.peak_blocks_active = 0
+        # jitted paged ops with trace accounting (lazy counters: the
+        # contiguous path's trace_counts stay exactly as before)
+        for name in ("gather", "scatter", "copy"):
+            engine.trace_counts.setdefault(name, 0)
+        self._gather = engine._jit_counted("gather", gather_blocks)
+        self._scatter = engine._jit_counted("scatter", scatter_blocks)
+        self._copy = engine._jit_counted("copy", copy_block)
+
+    # ---------------------------------------------------------------- clock
+    @property
+    def clock(self) -> Optional[int]:
+        """Paged slots have per-slot positions, not a shared clock."""
+        return None
+
+    def check_request(self, req) -> None:
+        need = -(-(len(req.prompt) + req.max_new_tokens) // self.block_size)
+        if need > self.num_blocks - 1:
+            raise ValueError(
+                f"request {req.request_id}: prompt + max_new_tokens needs "
+                f"{need} KV blocks but the pool only has "
+                f"{self.num_blocks - 1} allocatable blocks")
+
+    # ------------------------------------------------------ block lifecycle
+    def _alloc(self) -> int:
+        """A fresh writable block (ref=1): free list first, then FIFO
+        eviction of cached (ref==0, registered) prefix blocks."""
+        if self._free:
+            ph = self._free.pop()
+        elif self._cached:
+            ph = next(iter(self._cached))
+            del self._cached[ph]
+            h = self._hash_of.pop(ph)
+            self._full_map.pop(h, None)
+            ent = self._partial_map.pop(h, None)
+            if ent is not None:
+                self._phys_partial.pop(ent[0], None)
+            self.evictions += 1
+        else:
+            raise RuntimeError(
+                "paged KV pool exhausted despite admission reservation")
+        self._ref[ph] = 1
+        active = self.num_blocks - 1 - len(self._free) - len(self._cached)
+        self.peak_blocks_active = max(self.peak_blocks_active, active)
+        return ph
+
+    def _pin(self, ph: int) -> None:
+        if self._ref[ph] == 0:
+            self._cached.pop(ph, None)
+        self._ref[ph] += 1
+
+    def _unref(self, ph: int) -> None:
+        self._ref[ph] -= 1
+        assert self._ref[ph] >= 0
+        if self._ref[ph] == 0:
+            if ph in self._hash_of:
+                self._cached[ph] = None      # reclaimable, keeps its hash
+            else:
+                h = self._phys_partial.pop(ph, None)
+                if h is not None:
+                    self._partial_map.pop(h, None)
+                self._free.append(ph)
+
+    # ------------------------------------------------------- prefix lookup
+    def _lookup(self, prompt) -> Tuple[List[int], Optional[Tuple[int, int]]]:
+        """Longest registered prefix of ``prompt``: full blocks (capped so
+        at least one suffix token remains to prefill) plus at most one
+        partial tail share ``(phys, fill)`` whose values seed the side
+        cache (the block itself is COWed by the suffix write)."""
+        bs = self.block_size
+        L = len(prompt)
+        h = 0
+        full: List[int] = []
+        j = 0
+        while (j + 1) * bs <= L - 1:
+            blk = tuple(prompt[j * bs:(j + 1) * bs])
+            h2 = hash((h, blk))
+            ent = self._full_map.get(h2)
+            if ent is None or ent[1] != blk:
+                break
+            full.append(ent[0])
+            h = h2
+            j += 1
+        partial = None
+        ent = self._partial_map.get(h)
+        if ent is not None:
+            ph, fill, toks = ent
+            f = min(fill, (L - 1) - j * bs)
+            if f > 0 and tuple(prompt[j * bs:j * bs + f]) == toks[:f]:
+                partial = (ph, f)
+        if partial is None and bs > 1 and (j + 1) * bs == L:
+            # the prompt's own last block is registered in full but the
+            # keep-one-suffix cap excludes it — share all but its last
+            # position (classic identical-prompt case; triggers COW)
+            blk = tuple(prompt[j * bs:L])
+            ent = self._full_map.get(hash((h, blk)))
+            if ent is not None and ent[1] == blk:
+                partial = (ent[0], bs - 1)
+        return full, partial
+
+    def _register(self, prompt, table) -> None:
+        bs = self.block_size
+        L = len(prompt)
+        h = 0
+        for j in range(L // bs):
+            blk = tuple(prompt[j * bs:(j + 1) * bs])
+            h = hash((h, blk))
+            if h not in self._full_map:
+                ph = int(table[j])
+                self._full_map[h] = (ph, blk)
+                self._hash_of[ph] = h
+        f = L % bs
+        if f and h not in self._partial_map:
+            ph = int(table[L // bs])
+            if ph not in self._phys_partial and ph not in self._hash_of:
+                self._partial_map[h] = (ph, f, tuple(prompt[L - f:L]))
+                self._phys_partial[ph] = h
+
+    def on_weight_swap(self) -> None:
+        """Cached prefix K/V were computed under the outgoing weights —
+        flush the registry (in-use shared blocks keep their refs; parked
+        blocks go back to the free list)."""
+        for ph in list(self._cached):
+            self._free.append(ph)
+        self._cached.clear()
+        for ph in list(self._hash_of):
+            del self._hash_of[ph]
+        self._full_map.clear()
+        self._partial_map.clear()
+        self._phys_partial.clear()
+
+    # ----------------------------------------------------------- admission
+    def pick(self, queue, nfree: int, fresh: bool, limit_head: bool
+             ) -> Tuple[List, Optional[int]]:
+        """FCFS-with-skip under a conservative block budget: a request is
+        admissible iff its full ``ceil((L + max_new)/bs)`` block need fits
+        in free + evictable blocks net of outstanding reservations (prefix
+        sharing only *reduces* the real need at admit time)."""
+        bs = self.block_size
+        avail = len(self._free) + len(self._cached) - self._reserved
+        chosen: List = []
+        items = [queue[0]] if (limit_head and not fresh) else list(queue)
+        for item in items:
+            if len(chosen) >= nfree:
+                break
+            _, r = item
+            need = -(-(len(r.prompt) + r.max_new_tokens) // bs)
+            if need <= avail:
+                chosen.append(item)
+                avail -= need
+        for item in chosen:
+            queue.remove(item)
+        return chosen, None
+
+    def admit(self, chosen, slot_ids, clock, params) -> None:
+        """Admit each request into its slot: prefix lookup → gather shared
+        blocks → prefill the unshared suffix (batch 1, *unpadded* — the
+        same shapes as a solo round, so greedy tokens are bit-identical to
+        the contiguous oracle at equal effective context) → allocate/COW →
+        scatter the written blocks into the pool."""
+        for (_, r), slot in zip(chosen, slot_ids):
+            self._admit_one(slot, r, params)
+        jax.block_until_ready(self._logits)
+
+    def _ensure_pool(self, lg) -> None:
+        if self._cache is None:
+            self._cache = self.model.init_cache(
+                self.num_blocks, self.block_size, quantize_kv=False)
+            self._logits = jnp.zeros((self.max_slots, lg.shape[-1]),
+                                     lg.dtype)
+
+    def _admit_one(self, slot: int, r, params) -> None:
+        bs = self.block_size
+        prompt = [int(t) for t in r.prompt]
+        L = len(prompt)
+        full, partial = self._lookup(prompt)
+        nfull = len(full)
+        f_part = partial[1] if partial else 0
+        lp = nfull * bs + f_part
+        table = self._tables[slot]
+        for j, ph in enumerate(full):
+            self._pin(ph)
+            table[j] = ph
+        if partial:
+            self._pin(partial[0])
+            table[nfull] = partial[0]
+
+        side = self.side_cache(1)
+        if lp:
+            nblk = nfull + (1 if partial else 0)
+            # .copy(): jnp.asarray of host numpy can be zero-copy on CPU,
+            # and ``table`` is mutated below while the gather may still be
+            # dispatched asynchronously — always push a snapshot
+            side = self._gather(side, self._cache,
+                                jnp.asarray(table[:nblk].copy()))
+            side["pos"] = jnp.asarray(np.int32(lp))
+            toks = jnp.asarray(np.asarray(prompt[lp:], np.int32))[None]
+            lg, side = self.eng._prefill_chunk(params, {"tokens": toks},
+                                               side)
+            self.prefix_hits += 1
+            self.prefix_tokens_reused += lp
+        else:
+            toks = jnp.asarray(np.asarray(prompt, np.int32))[None]
+            lg, side = self.eng._prefill(params, {"tokens": toks}, side)
+        self._ensure_pool(lg)
+
+        # allocate / copy-on-write the blocks this admission writes
+        nb_prompt = -(-L // bs)
+        first_wb = lp // bs
+        for j in range(first_wb, nb_prompt):
+            ph = int(table[j])
+            if ph != TRASH:
+                # shared (or registered) block in the write range: the
+                # slot gets a private copy before its first divergent
+                # write; the side cache already holds the shared values,
+                # so the scatter below materializes the copy
+                self._unref(ph)
+                self.cow_copies += 1
+            table[j] = self._alloc()
+        phys_w = jnp.asarray(table[first_wb:nb_prompt].copy())
+        self._cache = self._scatter(self._cache, side, phys_w,
+                                    jnp.asarray(np.int32(first_wb)))
+        self._logits = self._logits.at[slot].set(
+            lg[0].astype(self._logits.dtype))
+
+        self._register(prompt, table)
+        self._lengths[slot] = L
+        nb_total = -(-(L + r.max_new_tokens) // bs)
+        self._slot_reserved[slot] = nb_total - nb_prompt
+        self._reserved += nb_total - nb_prompt
+
+    # -------------------------------------------------------------- decode
+    def decode(self, params, nxt, active_ids) -> None:
+        bs = self.block_size
+        for i in active_ids:
+            pos = int(self._lengths[i])
+            j = pos // bs
+            ph = int(self._tables[i, j])
+            if ph == TRASH:
+                self._tables[i, j] = self._alloc()
+                self._slot_reserved[i] -= 1
+                self._reserved -= 1
+            elif self._ref[ph] > 1:
+                # decode-time COW (defensive: admission already privatizes
+                # every block it writes, so a shared tail here means a new
+                # sharing mode — keep the invariant regardless)
+                nb = self._alloc()
+                self._cache = self._copy(self._cache,
+                                         jnp.asarray(np.int32(ph)),
+                                         jnp.asarray(np.int32(nb)))
+                self._unref(ph)
+                self._tables[i, j] = nb
+                self.cow_copies += 1
+        # snapshots, not views: the device arrays may alias host memory
+        # (zero-copy transfer) and ``_lengths``/``_tables`` are mutated
+        # right after dispatch — aliasing would race the async decode
+        self._cache["pos"] = jnp.asarray(self._lengths.copy())
+        self._cache["block_tables"] = jnp.asarray(self._tables.copy())
+        self._logits, self._cache = self.eng._decode(
+            params, nxt[:, None], self._cache)
+        self._lengths[active_ids] += 1
+
+    def retire(self, slot_id: int) -> None:
+        """Drop the slot's refs; exclusively-owned unregistered blocks go
+        back to the free list, registered ones park in the cached set."""
+        for j in range(self.nb_per_slot):
+            ph = int(self._tables[slot_id, j])
+            if ph != TRASH:
+                self._unref(ph)
+                self._tables[slot_id, j] = TRASH
+        self._lengths[slot_id] = 0
+        self._reserved -= int(self._slot_reserved[slot_id])
+        self._slot_reserved[slot_id] = 0
+
+    # ------------------------------------------------------- observability
+    def block_bytes(self) -> int:
+        """Device bytes per physical block (all layers)."""
+        if self._cache is None:
+            return 0
+        total = 0
+        for key in ("periods", "list"):
+            if key in self._cache:
+                total += sum(l.nbytes for l in
+                             jax.tree_util.tree_leaves(self._cache[key]))
+        return total // self.num_blocks
+
+    def stats(self) -> Dict[str, Any]:
+        free, cached = len(self._free), len(self._cached)
+        return {"backend": self.backend,
+                "block_size": self.block_size,
+                "blocks_total": self.num_blocks,
+                "blocks_free": free,
+                "blocks_cached": cached,
+                "blocks_active": self.num_blocks - 1 - free - cached,
+                "blocks_reserved": self._reserved,
+                "peak_blocks_active": self.peak_blocks_active,
+                "block_bytes": self.block_bytes(),
+                "prefix_hits": self.prefix_hits,
+                "prefix_tokens_reused": self.prefix_tokens_reused,
+                "cow_copies": self.cow_copies,
+                "evictions": self.evictions}

@@ -65,6 +65,14 @@ admissions wait for the pool to empty (frozen clock) — fresh-wave chunking
 works at any chunk size. Reload drains wait on pendings like any in-flight
 work; a deadline force-swap *abandons* the pending (its chunks ran on the
 old weights) and re-queues its requests at the front of the queue.
+
+KV-cache ownership: cache state (allocation, the decode clock, admission
+prefill + row/block scatter, retirement) lives behind the
+:class:`repro.serving.kvcache.KVCache` API — ``ContiguousKVCache`` is the
+layout described above; ``kv_backend="paged"`` swaps in ``PagedKVCache``
+(block tables + prefix sharing + copy-on-write, no left-padding, no shared
+clock). The schedulers only decide WHEN: admission timing, slot lifecycle,
+drain/swap points, sampling.
 """
 from __future__ import annotations
 
@@ -77,6 +85,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.kvcache import KVCache, admit_rows  # noqa: F401
 from repro.serving.sampling import sample
 
 
@@ -96,33 +105,6 @@ class Completion:
     swap_ms: float = 0.0          # weight-swap time observed by this request
     weights_version: int = 1      # WeightStore version pinned at admission
     forced_swaps: int = 0         # deadline force-swaps that landed in flight
-
-
-def admit_rows(pool, tmp, pool_logits, tmp_logits, idx):
-    """Scatter a ``k``-row prefill cache + its last-token logits into the
-    ``max_slots``-row pool at slot indices ``idx``.
-
-    Cache leaves are batch-leading except scan-stacked period caches
-    (``(periods, batch, ...)`` — batch at axis 1) and the scalar ``pos``,
-    which the admission prefill computed for the new clock and which simply
-    replaces the pool's (both equal the clock while slots are in flight; on
-    a fresh wave it rewinds the pool).
-    """
-    out = dict(pool)
-
-    def rows0(a, b):
-        return a.at[idx].set(b.astype(a.dtype))
-
-    def rows1(a, b):
-        return a.at[:, idx].set(b.astype(a.dtype))
-
-    for key in pool:
-        if key == "pos":
-            continue
-        out[key] = jax.tree_util.tree_map(
-            rows1 if key == "periods" else rows0, pool[key], tmp[key])
-    out["pos"] = tmp["pos"]
-    return out, pool_logits.at[idx].set(tmp_logits.astype(pool_logits.dtype))
 
 
 @dataclasses.dataclass
@@ -166,6 +148,9 @@ class _SchedulerBase:
         self.cfg = engine.cfg
         self.model = engine.model
         self.store = engine.store
+        # all cache state (allocation, clock, admission scatter, paging)
+        # lives behind the KVCache API; schedulers never touch cache dicts
+        self.kv = KVCache.create(engine)
         self.steps_total = 0
 
     def _emit_step(self, info: Dict[str, Any]) -> None:
@@ -186,6 +171,7 @@ class _SchedulerBase:
                 f"request {req.request_id}: prompt ({n_prompt}) + "
                 f"max_new_tokens ({req.max_new_tokens}) exceeds "
                 f"max_len ({self.cfg.max_len})")
+        self.kv.check_request(req)
 
 
 # ---------------------------------------------------------------------------
@@ -234,8 +220,7 @@ class RoundScheduler(_SchedulerBase):
         for i, r in enumerate(reqs):
             tokens[i, plen - len(r.prompt):] = np.asarray(r.prompt)
 
-        cache = self.model.init_cache(b, cfg.max_len,
-                                      quantize_kv=cfg.quantize_kv)
+        cache = self.kv.fresh(b)
         batch = {"tokens": jnp.asarray(tokens)}
         if self.model.cfg.is_encdec:
             batch["enc_frames"] = jnp.zeros(
@@ -312,34 +297,27 @@ class ContinuousScheduler(_SchedulerBase):
                 "models yet (per-slot encoder outputs have admission-"
                 "dependent lengths); use scheduler='round'")
         self.chunk = int(self.cfg.prefill_chunk or 0)
-        if self.chunk < 0:
-            raise ValueError("prefill_chunk must be >= 0")
-        if self.chunk:
-            if self.cfg.quantize_kv:
-                raise NotImplementedError(
-                    "chunked prefill with quantized KV caches is not "
-                    "supported: chunk continuations would attend to "
-                    "dequantized prefix keys, breaking the bit-exact "
-                    "equivalence with the monolithic prefill")
-            if not self.model.supports_chunked_prefill():
-                raise NotImplementedError(
-                    "chunked prefill requires a plain-attention dense stack "
-                    "(no MLA / sliding window / MoE / recurrent mixers): "
-                    "those paths fold state across the whole prefix in "
-                    "chunk-split-dependent order; set prefill_chunk=0")
-        self.max_slots = self.cfg.max_slots or self.cfg.max_batch
+        # config-only feasibility (chunk >= 0, chunk/paged vs quantized KV)
+        # is validated in ServeConfig.__post_init__; only model-dependent
+        # gates live here
+        if self.chunk and not self.model.supports_chunked_prefill():
+            raise NotImplementedError(
+                "chunked prefill requires a plain-attention dense stack "
+                "(no MLA / sliding window / MoE / recurrent mixers): "
+                "those paths fold state across the whole prefix in "
+                "chunk-split-dependent order; set prefill_chunk=0")
+        if self.kv.backend == "paged" \
+                and not self.model.supports_chunked_prefill():
+            raise NotImplementedError(
+                "the paged KV cache requires a plain-attention dense stack "
+                "(no MLA / sliding window / MoE / recurrent mixers): block "
+                "gather-attention and shared-prefix continuation prefills "
+                "assume per-position cache rows; use kv_backend='contiguous'")
+        self.max_slots = self.kv.max_slots
         self.slots: List[Optional[_Slot]] = [None] * self.max_slots
-        self._cache = None            # persistent pool cache (lazy init)
-        self._logits = None           # (max_slots, vocab) pending logits
-        # admission side caches, keyed by row count and reused across
-        # admissions: a fresh allocation per admission owned the admission
-        # step's latency at small scales. Stale rows are harmless — every
-        # position is rewritten before any masked-in read (prefill writes
-        # position p before any row >= p attends; decode writes the clock
-        # position before reading it), and masked columns contribute exact
-        # zeros — only the ``pos`` scalar must be rewound per admission.
-        self._side_caches: Dict[int, Any] = {}
         self._pending_swap_ms = 0.0   # swap time to attribute at admission
+        self._kv_version = None       # weight version the KV prefix cache
+        #                               was built under (flush on change)
         self._pending: Optional[PendingPrefill] = None
         self._head_skips = 0          # FCFS-with-skip starvation guard
         self._last_emit_t: Optional[float] = None
@@ -369,6 +347,9 @@ class ContinuousScheduler(_SchedulerBase):
         queue: "collections.deque[Tuple[int, Request]]" = collections.deque()
         ver, swap_ms = self.store.acquire()
         params = ver.params
+        # a version staged between generate() calls swaps at this acquire,
+        # bypassing the drain branch — the KV cache must still learn of it
+        self._sync_kv_version(ver.version)
         self._pending_swap_ms += swap_ms
         for i, r in enumerate(requests):
             self._validate(r)
@@ -377,7 +358,7 @@ class ContinuousScheduler(_SchedulerBase):
                                         ver.version)
                 continue
             queue.append((i, r))
-        clock = 0
+        self.kv.begin_run()
         drain_t0 = None
         self._last_emit_t = time.perf_counter()
 
@@ -410,6 +391,7 @@ class ContinuousScheduler(_SchedulerBase):
                     forced = busy
                     ver, sms = self.store.acquire()
                     params = ver.params
+                    self._sync_kv_version(ver.version)
                     self.store.note_swap(forced=forced, drain_ms=elapsed_ms)
                     self._pending_swap_ms += sms
                     if forced:
@@ -433,17 +415,15 @@ class ContinuousScheduler(_SchedulerBase):
                                   >= cfg.starvation_limit)
                     if self.chunk:
                         chosen = self._start_pending(
-                            queue, clock, free_ids, fresh, ver.version,
-                            limit_head)
+                            queue, free_ids, fresh, ver.version, limit_head)
                     else:
-                        chosen, new_clock = self._pick(
-                            queue, clock, len(free_ids), fresh, limit_head)
+                        chosen, new_clock = self.kv.pick(
+                            queue, len(free_ids), fresh, limit_head)
                         if chosen:
                             if fresh:
                                 self.waves += 1
-                            clock = new_clock
                             t0 = time.perf_counter()
-                            self._admit(chosen, free_ids, clock, params,
+                            self._admit(chosen, free_ids, new_clock, params,
                                         ver.version)
                             admit_ms = (time.perf_counter() - t0) * 1e3
                     # FCFS-with-skip starvation guard: count picks that
@@ -461,9 +441,9 @@ class ContinuousScheduler(_SchedulerBase):
             if self._pending is not None:
                 chunk_ms = self._advance_pending(params)
                 p = self._pending
-                if p.done >= p.target and (clock == p.target
+                if p.done >= p.target and (self.kv.clock == p.target
                                            or not active_ids):
-                    clock = self._scatter_pending(p)
+                    self._scatter_pending(p)
 
             active_ids = [i for i, s in enumerate(self.slots)
                           if s is not None]
@@ -474,9 +454,9 @@ class ContinuousScheduler(_SchedulerBase):
                 # empty pool (the clock is frozen; chunks run back-to-back)
                 continue
 
-            # ---- one lockstep step: sample at `clock`, retire, decode ----
+            # ---- one lockstep step: sample, retire, decode ----
             self.eng._key, sk = jax.random.split(self.eng._key)
-            nxt = sample(self._logits, sk, cfg.temperature, cfg.top_k)
+            nxt = sample(self.kv.logits, sk, cfg.temperature, cfg.top_k)
             nxt_np = np.asarray(nxt)
             recorded = 0
             t_now = time.perf_counter()
@@ -495,19 +475,20 @@ class ContinuousScheduler(_SchedulerBase):
                         (t_now - s.t0) * 1e3, s.swap_ms, s.version,
                         s.forced_swaps)
                     self.slots[i] = None
+                    self.kv.retire(i)
                     self.retired += 1
             self.steps_total += 1
             self.occupancy_sum += recorded
             self.max_occupancy = max(self.max_occupancy, recorded)
-            self._emit_step({"step": self.steps_total, "clock": clock,
+            self._emit_step({"step": self.steps_total,
+                             "clock": self.kv.clock,
                              "recorded": recorded, "version": ver.version,
                              "draining": draining, "t": t_now,
                              "step_ms": step_ms, "chunk_ms": chunk_ms,
                              "admit_ms": admit_ms})
-            if any(s is not None for s in self.slots):
-                self._logits, self._cache = self.eng._decode(
-                    params, nxt[:, None], self._cache)
-                clock += 1
+            alive = [i for i, s in enumerate(self.slots) if s is not None]
+            if alive:
+                self.kv.decode(params, nxt, alive)
         return results  # type: ignore[return-value]
 
     def stats(self) -> Dict[str, Any]:
@@ -525,79 +506,19 @@ class ContinuousScheduler(_SchedulerBase):
                 "chunk_steps": self.chunk_steps,
                 "pendings_started": self.pendings_started,
                 "pendings_abandoned": self.pendings_abandoned,
-                "step_ms": tail}
-
-    # ------------------------------------------------------------ internals
-    def _pick(self, queue, clock: int, nfree: int, fresh: bool,
-              limit_head: bool = False):
-        """Choose up to ``nfree`` queued requests admissible at the clock.
-
-        Mid-flight (``fresh=False``): FCFS with skip — a request fits iff
-        its prompt fits under the clock (``L <= clock``; the clock advances
-        one position per step, so longer prompts become admissible soon)
-        and its budget fits the cache horizon. ``limit_head`` narrows the
-        scan to the queue head (the starvation guard's anti-skip mode).
-
-        Fresh wave (``fresh=True``): the pool is empty, so the clock
-        restarts at the wave's longest admitted prompt. The queue head is
-        always admitted (its own ``L + max_new <= max_len`` was validated
-        at submit), guaranteeing progress; growing the wave re-checks every
-        already-chosen request against the raised clock so admission never
-        invalidates an earlier choice.
-        """
-        max_len = self.cfg.max_len
-        chosen: List[Tuple[int, Request]] = []
-        new_clock = 0 if fresh else clock
-        items = [queue[0]] if (limit_head and not fresh) else list(queue)
-        for item in items:
-            if len(chosen) >= nfree:
-                break
-            _, r = item
-            if fresh:
-                cand = max(new_clock, len(r.prompt))
-                if (cand + r.max_new_tokens <= max_len
-                        and all(cand + c.max_new_tokens <= max_len
-                                for _, c in chosen)):
-                    chosen.append(item)
-                    new_clock = cand
-            else:
-                if (len(r.prompt) <= clock
-                        and clock + r.max_new_tokens <= max_len):
-                    chosen.append(item)
-        for item in chosen:
-            queue.remove(item)
-        return chosen, new_clock
+                "step_ms": tail,
+                "kv": self.kv.stats()}
 
     # ------------------------------------------- chunked admission pipeline
-    def _solve_target(self, clock: int, longest: int) -> Optional[int]:
-        """Committed completion clock for a mid-flight chunked admission.
-
-        The pending consumes ``chunk`` positions per engine step while
-        residents advance the clock one per step, so completing at clock
-        ``P = clock + s - 1`` after ``s`` chunk-steps requires the chunks
-        to cover all ``P`` positions (``s * chunk >= P``) and the prompt to
-        fit the padding (``P >= longest``; prompts *longer than the clock*
-        are admissible — the chunks catch up, which the monolithic path
-        cannot do at all). Returns None when no ``s`` exists (``chunk == 1``
-        against a moving clock can never catch up; such requests wait for
-        the pool to empty, where the frozen clock makes any chunk feasible).
-        """
-        s = max(1, longest - clock + 1)
-        if self.chunk > 1:
-            s = max(s, -(-(clock - 1) // (self.chunk - 1)))
-        elif clock + s - 1 > s:
-            return None
-        return clock + s - 1
-
-    def _start_pending(self, queue, clock: int, free_ids, fresh: bool,
+    def _start_pending(self, queue, free_ids, fresh: bool,
                        version: int, limit_head: bool = False):
         """Pick requests for a chunked admission and commit its pad-to
-        clock. Fresh waves reuse :meth:`_pick` (frozen clock: the wave's
-        padding is the target); mid-flight picks grow the set under the
-        solved target, re-checking every earlier choice as it rises."""
+        clock. Fresh waves reuse the contiguous pick (frozen clock: the
+        wave's padding is the target); mid-flight picks grow the set under
+        the solved target, re-checking every earlier choice as it rises."""
         max_len = self.cfg.max_len
         if fresh:
-            chosen, target = self._pick(queue, clock, len(free_ids), True)
+            chosen, target = self.kv.pick(queue, len(free_ids), True, False)
         else:
             chosen = []
             target = None
@@ -606,9 +527,9 @@ class ContinuousScheduler(_SchedulerBase):
                 if len(chosen) >= len(free_ids):
                     break
                 _, r = item
-                cand_t = self._solve_target(
-                    clock, max([len(r.prompt)]
-                               + [len(c.prompt) for _, c in chosen]))
+                cand_t = self.kv.solve_target(
+                    max([len(r.prompt)]
+                        + [len(c.prompt) for _, c in chosen]))
                 if cand_t is None:
                     continue
                 if (cand_t + r.max_new_tokens <= max_len
@@ -633,17 +554,6 @@ class ContinuousScheduler(_SchedulerBase):
         self.pendings_started += 1
         return chosen
 
-    def _side_cache(self, k: int):
-        """A reusable ``k``-row admission cache with the clock rewound."""
-        cache = self._side_caches.get(k)
-        if cache is None:
-            cache = self.model.init_cache(k, self.cfg.max_len,
-                                          quantize_kv=self.cfg.quantize_kv)
-            self._side_caches[k] = cache
-        cache = dict(cache)
-        cache["pos"] = jnp.zeros((), jnp.int32)
-        return cache
-
     def _advance_pending(self, params) -> float:
         """Consume up to ``prefill_chunk`` positions of the pending's
         padded prompt on the side cache; returns the chunk's wall time."""
@@ -652,7 +562,7 @@ class ContinuousScheduler(_SchedulerBase):
         if n <= 0:
             return 0.0
         if p.cache is None:
-            p.cache = self._side_cache(len(p.slot_ids))
+            p.cache = self.kv.side_cache(len(p.slot_ids))
         t0 = time.perf_counter()
         toks = jnp.asarray(p.tokens[:, p.done:p.done + n])
         # synchronous on purpose: letting chunks queue up async behind the
@@ -669,21 +579,12 @@ class ContinuousScheduler(_SchedulerBase):
         self.chunk_steps += 1
         return ms
 
-    def _scatter_pending(self, p: PendingPrefill) -> int:
+    def _scatter_pending(self, p: PendingPrefill) -> None:
         """A completed pending joins the pool: scatter its side-cache rows
-        and final-token logits (the existing ``admit_rows`` path) and
-        create its slots at the committed clock. Returns the new clock."""
+        and final-token logits (the ``admit_rows`` path inside the KV
+        cache) and create its slots at the committed clock."""
         t0 = time.perf_counter()
-        if self._cache is None:
-            self._cache = self.model.init_cache(
-                self.max_slots, self.cfg.max_len,
-                quantize_kv=self.cfg.quantize_kv)
-            self._logits = jnp.zeros((self.max_slots, p.logits.shape[-1]),
-                                     p.logits.dtype)
-        idx = jnp.asarray(np.asarray(p.slot_ids, np.int32))
-        self._cache, self._logits = self.eng._admit_rows(
-            self._cache, p.cache, self._logits, p.logits, idx)
-        jax.block_until_ready(self._logits)
+        self.kv.scatter(p)
         p.prefill_ms += (time.perf_counter() - t0) * 1e3
         t_now = time.perf_counter()
         for j, (order, r) in enumerate(p.chosen):
@@ -698,7 +599,6 @@ class ContinuousScheduler(_SchedulerBase):
         self._pending_swap_ms = 0.0
         self.admitted += len(p.chosen)
         self._pending = None
-        return p.target
 
     def _abandon_pending(self, queue) -> None:
         """A force-swap lands while a chunked admission is mid-prefill: its
@@ -711,37 +611,35 @@ class ContinuousScheduler(_SchedulerBase):
         self._pending = None
         self.pendings_abandoned += 1
 
-    def _admit(self, chosen, free_ids, clock: int, params, version: int):
-        """Prefill ``chosen`` left-padded to ``clock`` on a side cache and
-        scatter the rows into the pool at the first ``len(chosen)`` free
-        slots."""
-        cfg = self.cfg
+    def _sync_kv_version(self, version: int) -> None:
+        """Cached prefix K/V blocks are weight-version-dependent: whenever
+        the acquired version differs from the one the KV cache was built
+        under, flush its reuse state before any admission runs on it."""
+        if self._kv_version != version:
+            if self._kv_version is not None:
+                self.kv.on_weight_swap()
+            self._kv_version = version
+
+    def _admit(self, chosen, free_ids, clock, params, version: int):
+        """Admit ``chosen`` into the first ``len(chosen)`` free slots via
+        the KV cache (contiguous: one left-padded batch prefill + row
+        scatter; paged: per-request prefix lookup + suffix prefill + block
+        scatter, where ``clock`` is None and each slot's position is its
+        own prompt length)."""
         k = len(chosen)
-        tokens = np.full((k, clock), cfg.pad_id, np.int32)
-        for j, (_, r) in enumerate(chosen):
-            tokens[j, clock - len(r.prompt):] = np.asarray(r.prompt)
-        tmp_cache = self._side_cache(k)
+        slot_ids = list(free_ids[:k])
         t0 = time.perf_counter()
-        lg, tmp_cache = self.eng._prefill(
-            params, {"tokens": jnp.asarray(tokens)}, tmp_cache)
-        if self._cache is None:
-            self._cache = self.model.init_cache(
-                self.max_slots, cfg.max_len, quantize_kv=cfg.quantize_kv)
-            self._logits = jnp.zeros((self.max_slots, lg.shape[-1]),
-                                     lg.dtype)
-        idx = jnp.asarray(np.asarray(free_ids[:k], np.int32))
-        self._cache, self._logits = self.eng._admit_rows(
-            self._cache, tmp_cache, self._logits, lg, idx)
-        jax.block_until_ready(self._logits)
+        self.kv.admit(chosen, slot_ids, clock, params)
         prefill_ms = (time.perf_counter() - t0) * 1e3
         t_now = time.perf_counter()
         for j, (order, r) in enumerate(chosen):
-            self.slots[free_ids[j]] = _Slot(
-                order=order, req=r, version=version, clock0=clock,
+            c0 = clock if clock is not None else len(r.prompt)
+            self.slots[slot_ids[j]] = _Slot(
+                order=order, req=r, version=version, clock0=c0,
                 t0=t_now, prefill_ms=prefill_ms,
                 swap_ms=self._pending_swap_ms)
             self.admission_log.append(
-                {"request_id": r.request_id, "slot": free_ids[j],
-                 "clock": clock, "version": version})
+                {"request_id": r.request_id, "slot": slot_ids[j],
+                 "clock": c0, "version": version})
         self._pending_swap_ms = 0.0
         self.admitted += k

@@ -1,0 +1,315 @@
+"""Paged KV-cache tests: bit-identity with the contiguous oracle on mixed
+lengths, EOS retirement + block reclamation (free-pool accounting, no
+leaks), copy-on-write after a shared prefix, pool-exhaustion admission
+backpressure, gather-attention kernel parity, and config validation.
+
+The bit-identity contract: because ``block_size`` divides ``max_len``, the
+paged gather width equals the contiguous cache width, so a paged slot's
+decode runs the exact same einsums as a solo round-engine run of the same
+request (positions ``0..L-1``, no left-padding) — masked-out columns
+contribute exact zeros through the finite-NEG_INF softmax.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving.engine import Request, ServeConfig, ServeEngine
+
+
+def _tiny(seed=0, vocab=256, **over):
+    cfg = get_config("granite-3-8b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32", n_layers=2, d_model=32,
+                              n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                              vocab=vocab, **over)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _paged(model, params, **over):
+    base = dict(max_len=32, scheduler="continuous", max_slots=2,
+                kv_backend="paged", block_size=4)
+    base.update(over)
+    return ServeEngine(model, params, ServeConfig(**base))
+
+
+def _solo_oracle(model, params, reqs, max_len=32):
+    """Per-request solo round-engine runs: the bit-exactness reference at
+    equal effective context (prompt at positions 0..L-1)."""
+    out = {}
+    for r in reqs:
+        eng = ServeEngine(model, params,
+                          ServeConfig(max_batch=1, max_len=max_len))
+        out[r.request_id] = eng.generate([r])[0].tokens
+    return out
+
+
+def _kv_stats(eng):
+    return eng.scheduler.stats()["kv"]
+
+
+def _assert_no_leaks(kv):
+    """Every non-trash block is free, cached, or active; nothing active
+    and nothing reserved after all requests completed."""
+    assert kv["blocks_active"] == 0
+    assert kv["blocks_reserved"] == 0
+    assert kv["blocks_free"] + kv["blocks_cached"] == kv["blocks_total"] - 1
+
+
+# ---------------------------------------------------------------------------
+# bit-identity
+# ---------------------------------------------------------------------------
+
+def test_paged_tokens_bit_identical_to_contiguous_oracle_mixed_lengths():
+    model, params = _tiny()
+    reqs = [Request(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=8,
+                    request_id=0),
+            Request(prompt=[7, 8], max_new_tokens=3, request_id=1),
+            Request(prompt=[9, 10, 11], max_new_tokens=5, request_id=2),
+            Request(prompt=[4] * 11, max_new_tokens=6, request_id=3)]
+    oracle = _solo_oracle(model, params, reqs)
+    eng = _paged(model, params)
+    outs = eng.generate(reqs)
+    for c in outs:
+        assert c.tokens == oracle[c.request_id]
+    sch = eng.scheduler.stats()
+    assert sch["admitted"] == 4 and sch["retired"] == 4
+    _assert_no_leaks(_kv_stats(eng))
+
+
+def test_paged_outlives_contiguous_admission_horizon():
+    """The contiguous backend can only admit while clock + max_new fits
+    max_len (wave resets); paged slots each use their own positions, so a
+    full-budget request admits mid-flight with no horizon wait — and
+    tokens still match the solo oracle."""
+    model, params = _tiny()
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=12, request_id=0),
+            Request(prompt=[5, 6, 7, 8], max_new_tokens=12, request_id=1),
+            Request(prompt=[9, 10], max_new_tokens=14, request_id=2)]
+    oracle = _solo_oracle(model, params, reqs, max_len=16)
+    eng = _paged(model, params, max_len=16, block_size=4, max_slots=2)
+    outs = eng.generate(reqs)
+    for c in outs:
+        assert c.tokens == oracle[c.request_id]
+    _assert_no_leaks(_kv_stats(eng))
+
+
+# ---------------------------------------------------------------------------
+# retirement + reclamation
+# ---------------------------------------------------------------------------
+
+def test_eos_retirement_reclaims_blocks_no_leak_across_waves():
+    model, params = _tiny()
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=10, request_id=0),
+            Request(prompt=[5, 6, 7], max_new_tokens=10, request_id=1),
+            Request(prompt=[11, 12], max_new_tokens=4, request_id=2)]
+    base = _paged(model, params).generate(reqs)
+    eos = next(t for t in base[0].tokens[:6]
+               if t not in base[1].tokens and t != 0)
+    cut = base[0].tokens.index(eos) + 1
+
+    eng = _paged(model, params, eos_id=eos)
+    outs = eng.generate(reqs)
+    assert outs[0].tokens == base[0].tokens[:cut]
+    assert len(outs[1].tokens) == 10
+    kv = _kv_stats(eng)
+    _assert_no_leaks(kv)
+
+    # repeated waves over the same engine must not leak blocks: the pool
+    # accounting returns to empty-active after every generate()
+    for _ in range(3):
+        eng.generate(reqs)
+        _assert_no_leaks(_kv_stats(eng))
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix reuse + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_cow_divergence_bit_identical():
+    """Two requests sharing a long prompt prefix: the second's admission
+    reuses the first's blocks (prefix hit), COWs at the divergence point,
+    and both streams stay bit-identical to their solo oracles."""
+    model, params = _tiny()
+    sys_prompt = [3, 1, 4, 1, 5, 9, 2, 6]            # two full blocks @ bs=4
+    reqs = [Request(prompt=sys_prompt + [10, 11], max_new_tokens=6,
+                    request_id=0),
+            Request(prompt=sys_prompt + [12, 13, 14], max_new_tokens=6,
+                    request_id=1),
+            Request(prompt=list(sys_prompt), max_new_tokens=6,
+                    request_id=2)]
+    oracle = _solo_oracle(model, params, reqs)
+    eng = _paged(model, params, max_slots=2)
+    outs = eng.generate(reqs)
+    for c in outs:
+        assert c.tokens == oracle[c.request_id]
+    kv = _kv_stats(eng)
+    assert kv["prefix_hits"] >= 1
+    assert kv["prefix_tokens_reused"] >= len(sys_prompt)
+    assert kv["cow_copies"] >= 1                      # divergent tail write
+    _assert_no_leaks(kv)
+
+
+def test_identical_prompts_share_full_blocks():
+    """An identical repeated prompt shares every full block; only the tail
+    re-prefills. Sequential (slot-reuse) and concurrent sharing both stay
+    bit-identical."""
+    model, params = _tiny()
+    prompt = [7, 7, 2, 9, 4, 4, 8, 1, 6]
+    reqs = [Request(prompt=list(prompt), max_new_tokens=5, request_id=i)
+            for i in range(4)]
+    oracle = _solo_oracle(model, params, reqs)
+    eng = _paged(model, params, max_slots=2)
+    outs = eng.generate(reqs)
+    for c in outs:
+        assert c.tokens == oracle[c.request_id]
+    kv = _kv_stats(eng)
+    assert kv["prefix_hits"] >= 3                     # all but the first
+    assert kv["prefix_tokens_reused"] >= 3 * (len(prompt) // 4) * 4
+    _assert_no_leaks(kv)
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion → admission backpressure
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_backpressures_admission_and_completes():
+    """A pool that fits one request's block budget at a time: the second
+    request waits for the first to retire (backpressure, not failure) and
+    both complete with oracle-identical tokens."""
+    model, params = _tiny()
+    reqs = [Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=7, request_id=0),
+            Request(prompt=[6, 7, 8, 9], max_new_tokens=8, request_id=1)]
+    # each request needs ceil((L+m)/4) = 3 blocks; 4 allocatable blocks
+    # fit one in flight (plus cached-prefix eviction headroom) but not two
+    oracle = _solo_oracle(model, params, reqs)
+    eng = _paged(model, params, max_slots=2, kv_blocks=5)
+    outs = eng.generate(reqs)
+    for c in outs:
+        assert c.tokens == oracle[c.request_id]
+    adm = {e["request_id"]: i
+           for i, e in enumerate(eng.scheduler.admission_log)}
+    assert adm[1] > adm[0]                            # serialized admission
+    assert eng.scheduler.stats()["max_occupancy"] == 1
+    _assert_no_leaks(_kv_stats(eng))
+
+
+def test_oversized_request_rejected_against_pool():
+    model, params = _tiny()
+    eng = _paged(model, params, kv_blocks=3)
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.generate([Request(prompt=[1, 2, 3, 4, 5, 6, 7, 8],
+                              max_new_tokens=8, request_id=0)])
+
+
+# ---------------------------------------------------------------------------
+# gather-attention kernel parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rep", [1, 4])
+def test_paged_attention_kernel_matches_ref(rep):
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_attention_ref)
+    key = jax.random.PRNGKey(0)
+    b, kv, d, bs, nb_slot, nblocks = 3, 2, 16, 4, 6, 20
+    h = kv * rep
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (nblocks, bs, kv, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (nblocks, bs, kv, d), jnp.float32)
+    bt = jax.random.randint(ks[3], (b, nb_slot), 1, nblocks).astype(jnp.int32)
+    lengths = jnp.asarray([0, 7, 21], jnp.int32)      # mixed fills
+    scale = 1.0 / np.sqrt(d)
+    ref = paged_attention_ref(q, k_pool, v_pool, bt, lengths, scale=scale)
+    ker = paged_attention(q, k_pool, v_pool, bt, lengths, scale=scale,
+                          use_pallas="interpret")
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_ref_masks_trash_columns():
+    """Columns past a row's length must contribute exactly zero: poisoning
+    masked pool blocks with huge values cannot change the output."""
+    from repro.kernels.paged_attention import paged_attention_ref
+    key = jax.random.PRNGKey(1)
+    b, h, kv, d, bs, nb_slot, nblocks = 2, 2, 2, 8, 4, 4, 9
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (nblocks, bs, kv, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (nblocks, bs, kv, d), jnp.float32)
+    bt = jnp.arange(1, 1 + b * nb_slot, dtype=jnp.int32).reshape(b, nb_slot)
+    lengths = jnp.asarray([5, 2], jnp.int32)
+    base = paged_attention_ref(q, k_pool, v_pool, bt, lengths, scale=0.35)
+    mask = np.zeros((nblocks, bs, 1, 1), np.float32)
+    for row in range(b):
+        L = int(lengths[row])
+        for j in range(nb_slot):
+            for o in range(bs):
+                if j * bs + o > L:
+                    mask[int(bt[row, j]), o] = 1.0
+    poisoned_k = k_pool + 1e6 * jnp.asarray(mask)
+    poisoned_v = v_pool + 1e6 * jnp.asarray(mask)
+    out = paged_attention_ref(q, poisoned_k, poisoned_v, bt, lengths,
+                              scale=0.35)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="divide max_len"):
+        ServeConfig(max_len=30, scheduler="continuous",
+                    kv_backend="paged", block_size=4)
+    with pytest.raises(NotImplementedError, match="scheduler='continuous'"):
+        ServeConfig(scheduler="round", kv_backend="paged")
+    with pytest.raises(NotImplementedError, match="quantized KV"):
+        ServeConfig(scheduler="continuous", kv_backend="paged",
+                    quantize_kv=True)
+    with pytest.raises(NotImplementedError, match="monolithic"):
+        ServeConfig(scheduler="continuous", kv_backend="paged",
+                    prefill_chunk=8)
+    with pytest.raises(ValueError, match="kv_backend"):
+        ServeConfig(kv_backend="banana")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeConfig(prefill_chunk=-1)
+    with pytest.raises(NotImplementedError, match="quantized KV"):
+        ServeConfig(scheduler="continuous", prefill_chunk=4,
+                    quantize_kv=True)
+
+
+def test_contiguous_trace_counts_unchanged_by_kvcache_api():
+    """The API move must not add paged counters to contiguous engines or
+    change their trace behavior (exact-dict assert, mirroring
+    test_scheduler's)."""
+    model, params = _tiny()
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_len=32))
+    eng.generate([Request(prompt=[1, 2, 3], max_new_tokens=4)])
+    assert eng.trace_counts == {"prefill": 1, "prefill_chunk": 0,
+                                "decode": 1, "admit": 0}
+
+
+def test_paged_weight_swap_flushes_prefix_cache():
+    """Prefix K/V depend on the weight version: after a hot swap, a
+    repeated prompt must re-prefill (no stale-weight reuse), and tokens
+    must match a fresh engine on the new weights."""
+    model, params = _tiny(seed=0)
+    _, params2 = _tiny(seed=1)
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]
+    reqs = [Request(prompt=list(prompt), max_new_tokens=5, request_id=0)]
+
+    eng = _paged(model, params, max_slots=1)
+    eng.generate(reqs)
+    hits0 = _kv_stats(eng)["prefix_hits"]
+    eng.store.stage(fp_params=params2, source="test", block=True)
+    outs = eng.generate(reqs)
+    fresh = _paged(model, params2, max_slots=1).generate(reqs)
+    assert outs[0].tokens == fresh[0].tokens
+    # the post-swap admission must not have hit the stale prefix cache
+    assert _kv_stats(eng)["prefix_hits"] == hits0
