@@ -30,6 +30,14 @@ every request in a round waits for the round's longest):
   bit-identical between the backends (verified); reported are the
   throughput ratio (acceptance: paged ≥ 1.3x), the prefix hit rate, and
   resident KV bytes per context token.
+* **paged chunked admission** — the shared-prefix shape under mid-flight
+  admission: residents decode while turns carrying a long registered
+  prefix plus a long unshared suffix admit into the cycle slot. On the
+  paged backend every pending's target is its own prompt length, so
+  chunked admission works at any chunk size mid-flight and its greedy
+  tokens must be bit-identical to monolithic paged admission (verified);
+  the chunked/monolithic p99 decode step-time ratio is held to the same
+  bar as the contiguous chunked-prefill experiment.
 
 Writes ``BENCH_serving.json`` (or ``--smoke`` scale for the CI bench
 gate, compared against the committed baseline by
@@ -420,6 +428,117 @@ def bench_shared_prefix(smoke: bool = False, repeats: int = 3,
     return out
 
 
+def paged_chunked_workload(sets: int):
+    """Chat-shaped mid-flight admissions on the paged backend: three
+    residents decode long budgets while a cycle slot serves a sequence of
+    turns that all carry the same 256-token system prefix plus a long
+    distinct suffix. Once the prefix is registered, every admission pins
+    its blocks and prefills only the ~288-token suffix — monolithically
+    that suffix is the p99 decode step-time spike; chunked it is a bounded
+    chunk per step. Suffixes are distinct per request *set* (the registry
+    would otherwise absorb them after one pass and leave nothing to
+    prefill) but share lengths, so every set visits the same per-step work
+    and the elementwise min across sets is valid."""
+    max_len, bs, chunk = 576, 16, 16
+    pfx, sfx, turn_budget, turns = 256, 288, 8, 6
+    rng = np.random.default_rng(13)
+    prefix = [int(t) for t in rng.integers(1, 500, size=pfx)]
+    residents = [Request(prompt=[int(t) for t in
+                                 rng.integers(1, 500, size=64)],
+                         max_new_tokens=160, request_id=i)
+                 for i in range(3)]
+    reqs_by_set = []
+    for s in range(sets):
+        reqs_by_set.append(residents + [
+            Request(prompt=prefix + [int(t) for t in
+                                     rng.integers(1, 500, size=sfx)],
+                    max_new_tokens=turn_budget,
+                    request_id=100 * s + 10 + j)
+            for j in range(turns)])
+    return reqs_by_set, dict(max_len=max_len, block_size=bs, chunk=chunk,
+                             prefix_len=pfx, suffix_len=sfx, turns=turns)
+
+
+def bench_paged_chunked(smoke: bool = False, repeats: int = 4,
+                        report=print) -> Dict:
+    """Paged chunked admission vs paged monolithic admission on the
+    long-shared-prefix workload. Under the paged backend every pending's
+    completion target is its own prompt length (no catch-up recurrence),
+    so tokens are position-deterministic and must stay bit-identical for
+    every chunk split (verified). Fixed-size at every scale on the
+    FLOPs-bound ``_tail_model`` width, for the same reason as
+    ``bench_prefill_tail``: the admission spike is a function of the
+    unshared-suffix length, and shrinking it would measure nothing."""
+    del smoke
+    model, params = _tail_model()
+    sets = repeats + 2               # 2 warm sets + `repeats` timed sets
+    reqs_by_set, wl = paged_chunked_workload(sets)
+    out: Dict = {"turns": wl["turns"], "system_prefix_len": wl["prefix_len"],
+                 "suffix_len": wl["suffix_len"],
+                 "prefill_chunk": wl["chunk"], "block_size": wl["block_size"]}
+    tokens: Dict[str, List] = {}
+    for label, c in (("monolithic", 0), ("chunked", wl["chunk"])):
+        eng = ServeEngine(model, params,
+                          ServeConfig(max_batch=4, max_len=wl["max_len"],
+                                      scheduler="continuous",
+                                      kv_backend="paged",
+                                      block_size=wl["block_size"],
+                                      kv_blocks=800, prefill_chunk=c))
+        # set 0 fills the block registry (first-touch full prefills); set 1
+        # warms the steady-state jit shapes (admissions now hit the
+        # registered prefix, so the suffix-width forwards appear here)
+        for s in range(2):
+            eng.generate(reqs_by_set[s])
+        kv0 = eng.scheduler.stats()["kv"]
+        adm0, chunk0 = eng.scheduler.admitted, eng.scheduler.chunk_steps
+        per_run: List[List[float]] = []
+        toks: List[List] = []
+        gc.collect()
+        gc.disable()
+        try:
+            for s in range(2, sets):
+                eng.scheduler.step_log = steps = []
+                outs = eng.generate(reqs_by_set[s])
+                per_run.append([e["step_ms"] for e in steps])
+                toks.append([o.tokens for o in outs])
+        finally:
+            gc.enable()
+        assert len({len(r) for r in per_run}) == 1
+        ms = np.asarray(per_run, np.float64).min(axis=0)
+        kv = eng.scheduler.stats()["kv"]
+        timed_admits = eng.scheduler.admitted - adm0
+        m = {
+            "steps": int(ms.size),
+            "p50_ms": float(np.percentile(ms, 50)),
+            "p95_ms": float(np.percentile(ms, 95)),
+            "p99_ms": float(np.percentile(ms, 99)),
+            "max_ms": float(ms.max()),
+            "prefix_hit_rate":
+                (kv["prefix_hits"] - kv0["prefix_hits"]) / timed_admits,
+        }
+        if c:
+            m["chunk_steps_per_set"] = \
+                (eng.scheduler.chunk_steps - chunk0) // repeats
+        eng.close()
+        tokens[label] = toks
+        out[label] = m
+        report(f"[serving] paged-chunked {label:10s}: step-time p50 "
+               f"{m['p50_ms']:6.2f} / p95 {m['p95_ms']:6.2f} / p99 "
+               f"{m['p99_ms']:6.2f} / max {m['max_ms']:6.2f} ms "
+               f"({m['steps']} steps, hit rate "
+               f"{m['prefix_hit_rate']:.2f})")
+    out["tokens_identical"] = tokens["monolithic"] == tokens["chunked"]
+    if not out["tokens_identical"]:
+        raise RuntimeError(
+            "paged chunked admission diverged from the monolithic paged "
+            "path: greedy tokens differ — the bit-identity guarantee is "
+            "broken")
+    out["p99_ratio"] = out["chunked"]["p99_ms"] / out["monolithic"]["p99_ms"]
+    report(f"[serving] paged-chunked chunked/monolithic p99 ratio: "
+           f"{out['p99_ratio']:.2f}x (tokens bit-identical)")
+    return out
+
+
 def run(report=print, smoke: bool = False,
         out_path: str = "BENCH_serving.json") -> Dict:
     results = {"smoke": smoke,
@@ -428,6 +547,8 @@ def run(report=print, smoke: bool = False,
                "prefill_tail": bench_prefill_tail(smoke=smoke,
                                                   report=report),
                "shared_prefix": bench_shared_prefix(smoke=smoke,
+                                                    report=report),
+               "paged_chunked": bench_paged_chunked(smoke=smoke,
                                                     report=report)}
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)

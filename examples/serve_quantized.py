@@ -89,9 +89,13 @@ def paged_prefix_demo(tok):
     re-prefills the whole prompt each turn; the paged backend registers
     the system prompt's full blocks at the first turn and every later
     turn pins them into its block table (refcount++), prefilling only its
-    own suffix — same greedy tokens, a fraction of the prefill work.
-    (Paged needs a plain-attention dense stack, so this demo uses the
-    dense granite config rather than the MoE model above.)"""
+    own suffix — same greedy tokens, a fraction of the prefill work. The
+    paged side also runs chunked admission (``prefill_chunk``): the
+    unshared suffix is consumed a bounded chunk per step at the slot's
+    own position, so a long prompt never stalls residents — and tokens
+    stay bit-identical to the monolithic contiguous run. (Paged needs a
+    plain-attention dense stack, so this demo uses the dense granite
+    config rather than the MoE model above.)"""
     cfg = get_config("granite-3-8b", reduced=True)
     cfg = dataclasses.replace(cfg, dtype="float32", vocab=260)
     model = build_model(cfg)
@@ -101,12 +105,16 @@ def paged_prefix_demo(tok):
     turns = ["hi there", "what is squant?", "thanks, bye"]
     outs = {}
     for backend in ("contiguous", "paged"):
+        # the paged engine is the --kv-backend paged --prefill-chunk CLI
+        # combination: chunked admission at per-slot positions
+        chunk = 16 if backend == "paged" else 0
         eng = ServeEngine(model, params,
                           ServeConfig(max_batch=1, max_len=128,
                                       quantize_weights="squant",
                                       weight_bits=8,
                                       scheduler="continuous",
-                                      kv_backend=backend, block_size=8))
+                                      kv_backend=backend, block_size=8,
+                                      prefill_chunk=chunk))
         # serial turns, one generate() per turn — the arrival pattern of
         # a chat session; the paged block registry persists across calls
         outs[backend] = [eng.generate(

@@ -10,9 +10,10 @@ catch >2x regressions (a scheduler that stopped batching, a stall
 serializing the swap path, chunked prefill that stopped bounding the
 admission spike, a paged KV cache that stopped reusing prefixes), not
 wall-clock noise across runners. Some hard floors are absolute: chunked
-greedy tokens must stay bit-identical to the monolithic path and paged
-tokens to the contiguous backend; the *committed baseline's*
-chunked/monolithic p99 ratio must stay at or under 0.5x and its
+greedy tokens must stay bit-identical to the monolithic path (contiguous
+and paged admission alike) and paged tokens to the contiguous backend;
+the *committed baseline's* chunked/monolithic p99 ratios must stay at or
+under 0.5x and its
 shared-prefix paged/contiguous throughput ratio at or above 1.3x (the
 acceptance bars those PRs landed — re-committing a degraded baseline
 fails the gate; the fresh runs get the usual generous tolerance against
@@ -124,6 +125,25 @@ def main() -> None:
     check("serving.shared-prefix.ratio", ratio >= floor,
           f"paged/contiguous {ratio:.2f}x (baseline {base_ratio:.2f}x, "
           f"floor {floor:.2f}x)")
+
+    # --- serving: paged chunked admission must keep bounding the spike ---
+    fp, bp = fresh_serving["paged_chunked"], base_serving["paged_chunked"]
+    check("serving.paged-chunked.tokens-identical", fp["tokens_identical"],
+          "paged chunked greedy tokens vs monolithic paged admission")
+    check("serving.paged-chunked.hit-rate",
+          fp["chunked"]["prefix_hit_rate"] > 0,
+          f"prefix hit rate {fp['chunked']['prefix_hit_rate']:.2f}")
+    # same bar structure as prefill-tail: the committed baseline must keep
+    # the chunked-contiguous acceptance bar (<= 0.5x), the fresh run gets
+    # >2x-vs-baseline tolerance under an absolute structural ceiling
+    ratio, base_ratio = fp["p99_ratio"], bp["p99_ratio"]
+    check("serving.paged-chunked.baseline-acceptance", base_ratio <= 0.5,
+          f"committed chunked/monolithic p99 ratio {base_ratio:.2f}x "
+          "(bar 0.50x)")
+    cap = min(2.0 * base_ratio, 0.95)
+    check("serving.paged-chunked.p99-ratio", ratio <= cap,
+          f"chunked/monolithic p99 step-time {ratio:.2f}x "
+          f"(baseline {base_ratio:.2f}x, cap {cap:.2f}x)")
 
     # --- reload: staging/swap latency on the fixed-size workloads --------
     for wl in ("toy_cnn", "reduced_lm"):

@@ -28,6 +28,14 @@ same system prompt prefill it once:
 
     python -m repro.launch.serve --scheduler continuous --max-slots 8 \
         --kv-backend paged --block-size 16 --prompts "hi" "hi there"
+
+Paged composes with chunked admission (``--prefill-chunk``): each pending
+prefills its own unshared suffix a bounded chunk per step at its own
+position (no shared clock, so any chunk size works mid-flight), keeping
+resident decode tails flat while long shared-prefix prompts admit:
+
+    python -m repro.launch.serve --scheduler continuous --max-slots 8 \
+        --kv-backend paged --block-size 16 --prefill-chunk 16
 """
 from __future__ import annotations
 
@@ -69,7 +77,8 @@ def main():
                          "this many prompt positions per engine step while "
                          "resident slots keep decoding, bounding the "
                          "step-time spike a long-prompt admission causes "
-                         "(0: monolithic prefill)")
+                         "(0: monolithic prefill; composes with "
+                         "--kv-backend paged)")
     ap.add_argument("--kv-backend", default="contiguous",
                     choices=["contiguous", "paged"],
                     help="KV-cache layout: contiguous (one cache row per "

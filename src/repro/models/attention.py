@@ -253,7 +253,11 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
     "chunk" (a partial-prefill continuation: ``s`` prompt tokens written at
     absolute position ``pos``, attending over the already-filled cache
     prefix — the same repeated-KV einsum as prefill, so the chunked path's
-    activations match the monolithic prefill bit-for-bit).
+    activations match the monolithic prefill bit-for-bit). ``pos`` is a
+    traced scalar, so the same trace serves the contiguous scheduler's
+    shared clock AND the paged backend's per-slot positions (a chunked
+    paged admission continues from its own prompt offset, shared-prefix
+    gathers included) with no per-offset retrace.
 
     ``block_tables`` switches decode to the paged layout: the cache leaves
     are a block pool ``(num_blocks, block_size, KV, D)`` shared by all

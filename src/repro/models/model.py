@@ -142,6 +142,10 @@ class LM:
         the chunk attends over the already-written cache prefix plus itself,
         so feeding a prompt through this in any chunk split yields the same
         cache and last-token logits as one :meth:`prefill` call, bit-exact.
+        The offset is traced, not baked in: the contiguous scheduler calls
+        this at its shared clock, the paged backend at each slot's own
+        prompt offset (including continuations over a gathered shared
+        prefix) — one trace per chunk width covers both.
         Single-token chunks are padded to two rows internally: XLA lowers a
         one-row gemm as a matvec whose accumulation order differs from the
         monolithic prefill's, and the dummy row (whose cache write lands one

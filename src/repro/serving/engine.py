@@ -70,7 +70,10 @@ class ServeConfig:
     # continuous only: admission prefill consumes at most this many prompt
     # positions per engine step while resident slots keep decoding, bounding
     # the step-time spike a long-prompt admission causes (0: monolithic
-    # prefill, the round scheduler always prefills monolithically)
+    # prefill, the round scheduler always prefills monolithically).
+    # Composes with kv_backend='paged': each pending entry chunk-prefills
+    # its own unshared suffix at its own position (no shared clock), so any
+    # chunk size works mid-flight and tokens stay bit-identical
     prefill_chunk: int = 0
     # continuous only: after this many mid-flight admissions that skipped
     # the queue head, admission narrows to the head until it lands (FCFS-
@@ -113,10 +116,6 @@ class ServeConfig:
                 raise NotImplementedError(
                     "the paged KV cache does not support quantized KV "
                     "caches yet (block gather would mix per-row scales)")
-            if self.prefill_chunk:
-                raise NotImplementedError(
-                    "the paged KV cache is gated to monolithic admission "
-                    "prefill for now; set prefill_chunk=0 (see ROADMAP)")
             if self.block_size < 1:
                 raise ValueError("block_size must be >= 1")
             if self.max_len % self.block_size:

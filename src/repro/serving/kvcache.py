@@ -43,6 +43,17 @@ block budget up front (allocated lazily as decode crosses block
 boundaries), so a request that is admitted can always finish: pool
 exhaustion surfaces as admission backpressure, never as a mid-decode
 failure.
+
+Chunked admission (``prefill_chunk > 0``) splits the paged admission into
+a multi-step lifecycle driven by the scheduler's ``PagedPendingPrefill``:
+``reserve_pending`` (full block budget outstanding before the first
+chunk), ``begin_chunked_admit`` (prefix pin + gather — pins happen before
+any chunk so mid-admission FIFO eviction can't recycle a block about to
+be read), N ``prefill_chunk`` continuations on the 1-row side cache while
+residents decode, then ``complete_chunked_admit`` (the same alloc/COW/
+scatter/register commit as monolithic admission, at the slot's own prompt
+length) — or ``abandon_chunked_admit`` on a force-swap, which unpins and
+releases the reservation.
 """
 from __future__ import annotations
 
@@ -402,6 +413,12 @@ class PagedKVCache(KVCache):
         self._cached: Dict[int, None] = {}     # ref==0 registered, FIFO
         self._slot_reserved = np.zeros((self.max_slots,), np.int32)
         self._reserved = 0
+        # shared-prefix blocks pinned by an in-flight admission, held OUT
+        # of the slot's table until commit: decode writes every batch row
+        # at its position, and an in-flight slot sits at position 0 — its
+        # table must stay all-TRASH (writes land in the trash block) so a
+        # pinned REGISTERED block is never written through mid-admission
+        self._pending_pins: Dict[int, List[int]] = {}
         # prefix registry: chain hash -> (phys, block tokens) for full
         # blocks (content-verified on match), parent hash -> (phys, fill,
         # tokens) for one partial tail per chain position
@@ -585,42 +602,55 @@ class PagedKVCache(KVCache):
             self._logits = jnp.zeros((self.max_slots, lg.shape[-1]),
                                      lg.dtype)
 
-    def _admit_one(self, slot: int, r, params) -> None:
+    def _pin_prefix(self, slot: int, prompt) -> Tuple[int, dict]:
+        """The start of every paged admission (monolithic or chunked):
+        longest-registered-prefix lookup, pin the matched blocks into the
+        slot's table (ref++ — they leave the evictable cached set HERE,
+        before any prefill work runs, so pool pressure during a multi-step
+        admission can never recycle a block the admission is about to
+        read), and gather their values into a fresh 1-row side cache whose
+        clock is the shared length ``lp``.
+
+        The pinned blocks are parked in ``_pending_pins`` — NOT written
+        into the slot's table until :meth:`_commit_blocks`: decode writes
+        every batch row's K/V at its position, and an in-flight slot sits
+        at position 0 with its table all-TRASH, so interleaved resident
+        decode steps land in the trash block instead of writing through a
+        pinned registered block."""
         bs = self.block_size
-        prompt = [int(t) for t in r.prompt]
-        L = len(prompt)
         full, partial = self._lookup(prompt)
         nfull = len(full)
         f_part = partial[1] if partial else 0
         lp = nfull * bs + f_part
-        table = self._tables[slot]
-        for j, ph in enumerate(full):
-            self._pin(ph)
-            table[j] = ph
+        pinned = list(full)
         if partial:
-            self._pin(partial[0])
-            table[nfull] = partial[0]
-
+            pinned.append(partial[0])
+        for ph in pinned:
+            self._pin(ph)
+        self._pending_pins[slot] = pinned
         side = self.side_cache(1)
         if lp:
-            nblk = nfull + (1 if partial else 0)
-            # .copy(): jnp.asarray of host numpy can be zero-copy on CPU,
-            # and ``table`` is mutated below while the gather may still be
-            # dispatched asynchronously — always push a snapshot
             side = self._gather(side, self._cache,
-                                jnp.asarray(table[:nblk].copy()))
+                                jnp.asarray(np.asarray(pinned, np.int32)))
             side["pos"] = jnp.asarray(np.int32(lp))
-            toks = jnp.asarray(np.asarray(prompt[lp:], np.int32))[None]
-            lg, side = self.eng._prefill_chunk(params, {"tokens": toks},
-                                               side)
             self.prefix_hits += 1
             self.prefix_tokens_reused += lp
-        else:
-            toks = jnp.asarray(np.asarray(prompt, np.int32))[None]
-            lg, side = self.eng._prefill(params, {"tokens": toks}, side)
-        self._ensure_pool(lg)
+        return lp, side
 
-        # allocate / copy-on-write the blocks this admission writes
+    def _commit_blocks(self, slot: int, prompt, lp: int, side, lg,
+                       max_new: int) -> int:
+        """The end of every paged admission: allocate / copy-on-write the
+        write-range blocks, scatter the side-cache rows into them, place
+        the last-token logits, register the prompt's blocks for prefix
+        reuse, and set the slot's decode position to its own prompt
+        length. Returns the decode-only block remainder (the reservation
+        that stays outstanding until decode crosses those boundaries)."""
+        bs = self.block_size
+        L = len(prompt)
+        self._ensure_pool(lg)
+        table = self._tables[slot]
+        for j, ph in enumerate(self._pending_pins.pop(slot, ())):
+            table[j] = ph
         nb_prompt = -(-L // bs)
         first_wb = lp // bs
         for j in range(first_wb, nb_prompt):
@@ -638,12 +668,97 @@ class PagedKVCache(KVCache):
                                     jnp.asarray(np.int32(first_wb)))
         self._logits = self._logits.at[slot].set(
             lg[0].astype(self._logits.dtype))
-
         self._register(prompt, table)
         self._lengths[slot] = L
-        nb_total = -(-(L + r.max_new_tokens) // bs)
-        self._slot_reserved[slot] = nb_total - nb_prompt
-        self._reserved += nb_total - nb_prompt
+        return -(-(L + max_new) // bs) - nb_prompt
+
+    def _admit_one(self, slot: int, r, params) -> None:
+        prompt = [int(t) for t in r.prompt]
+        lp, side = self._pin_prefix(slot, prompt)
+        if lp:
+            toks = jnp.asarray(np.asarray(prompt[lp:], np.int32))[None]
+            lg, side = self.eng._prefill_chunk(params, {"tokens": toks},
+                                               side)
+        else:
+            toks = jnp.asarray(np.asarray(prompt, np.int32))[None]
+            lg, side = self.eng._prefill(params, {"tokens": toks}, side)
+        rem = self._commit_blocks(slot, prompt, lp, side, lg,
+                                  r.max_new_tokens)
+        self._slot_reserved[slot] = rem
+        self._reserved += rem
+
+    # ----------------------------------------- chunked (multi-step) admission
+    def reserve_pending(self, slot: int, req) -> None:
+        """Reserve a chunked admission's FULL block budget at pending
+        creation, before its first chunk runs: ``pick`` chose the request
+        against free + evictable net of reservations, and residents keep
+        decoding (and allocating at block boundaries) for the whole
+        multi-step admission — without the outstanding reservation their
+        allocations could consume the blocks the pending needs to land.
+        Completion re-points the reservation at the decode-only remainder;
+        abandonment releases it."""
+        need = -(-(len(req.prompt) + req.max_new_tokens) // self.block_size)
+        self._slot_reserved[slot] = need
+        self._reserved += need
+
+    def begin_chunked_admit(self, slot: int, req) -> Tuple[int, dict]:
+        """First chunk step of a pending entry: prefix lookup + pin +
+        gather (see :meth:`_pin_prefix` — pinning happens HERE, before any
+        chunk is consumed, never at completion: FIFO eviction of ref-0
+        cached blocks under pool pressure between chunk steps could
+        otherwise free a block the pending gathered from). Returns the
+        shared-prefix length and the positioned side cache; the scheduler
+        chunk-prefills ``prompt[lp:]`` on it across engine steps."""
+        return self._pin_prefix(slot, [int(t) for t in req.prompt])
+
+    def complete_chunked_admit(self, slot: int, req, lp: int, side,
+                               lg) -> None:
+        """A pending entry consumed its whole suffix: scatter the side
+        cache into the slot's blocks at the slot's OWN prompt length (the
+        per-slot clock — no shared completion clock, no catch-up
+        recurrence) and re-point the up-front reservation at the
+        decode-only remainder."""
+        rem = self._commit_blocks(slot, [int(t) for t in req.prompt], lp,
+                                  side, lg, req.max_new_tokens)
+        resv = int(self._slot_reserved[slot])
+        self._reserved -= resv - rem
+        self._slot_reserved[slot] = rem
+        jax.block_until_ready(self._logits)
+
+    def abandon_chunked_admit(self, slot: int) -> None:
+        """A force-swap abandons a pending entry mid-prefill: unpin
+        (ref--) the shared-prefix blocks it pinned at begin and release
+        the slot's reserved-block budget. Dropping only the side cache —
+        the contiguous abandon path — would leak both until pool
+        exhaustion."""
+        for ph in self._pending_pins.pop(slot, ()):
+            self._unref(ph)
+        self.retire(slot)
+
+    def check_invariants(self) -> None:
+        """Test/debug hook: every non-trash block is in exactly one of
+        {free, cached, active (ref > 0)} — i.e. free + cached + active +
+        trash == num_blocks — reservations are non-negative and sum
+        consistently, and every live table entry holds a reference."""
+        free, cached = set(self._free), set(self._cached)
+        assert TRASH not in free and TRASH not in cached
+        assert not free & cached, "block in free AND cached"
+        active = {ph for ph in range(1, self.num_blocks)
+                  if self._ref[ph] > 0}
+        assert not active & free and not active & cached, \
+            "referenced block in free/cached"
+        assert len(free) + len(cached) + len(active) + 1 == self.num_blocks
+        assert all(self._ref[ph] == 0 for ph in free | cached)
+        assert self._reserved == int(self._slot_reserved.sum()) >= 0
+        assert np.all(self._slot_reserved >= 0)
+        for pins in self._pending_pins.values():
+            assert all(self._ref[ph] >= 1 for ph in pins), \
+                "in-flight admission pin on unreferenced block"
+        for s in range(self.max_slots):
+            for j in range(self.nb_per_slot):
+                ph = int(self._tables[s, j])
+                assert ph == TRASH or self._ref[ph] >= 1, \
+                    f"slot {s} table points at unreferenced block {ph}"
 
     # -------------------------------------------------------------- decode
     def decode(self, params, nxt, active_ids) -> None:
@@ -708,6 +823,7 @@ class PagedKVCache(KVCache):
                 "blocks_free": free,
                 "blocks_cached": cached,
                 "blocks_active": self.num_blocks - 1 - free - cached,
+                "blocks_trash": 1,
                 "blocks_reserved": self._reserved,
                 "peak_blocks_active": self.peak_blocks_active,
                 "block_bytes": self.block_bytes(),

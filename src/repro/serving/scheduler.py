@@ -66,6 +66,17 @@ works at any chunk size. Reload drains wait on pendings like any in-flight
 work; a deadline force-swap *abandons* the pending (its chunks ran on the
 old weights) and re-queues its requests at the front of the queue.
 
+Under ``kv_backend="paged"`` the pending is a :class:`PagedPendingPrefill`:
+no shared clock means no catch-up recurrence and no left-padding — each
+entry's completion target is its own prompt length, so EVERY chunk size
+works mid-flight (including ``chunk == 1``) and tokens are
+position-deterministic regardless of admission timing. Entries chunk one
+at a time on a 1-row side cache (shared-prefix blocks pinned + gathered
+first, only the unshared suffix prefilled); a completed entry scatters
+into its reserved blocks and starts decoding immediately while later
+entries keep chunking. A force-swap abandon additionally releases the
+unfinished entries' block reservations and prefix pins.
+
 KV-cache ownership: cache state (allocation, the decode clock, admission
 prefill + row/block scatter, retirement) lives behind the
 :class:`repro.serving.kvcache.KVCache` API — ``ContiguousKVCache`` is the
@@ -140,6 +151,40 @@ class PendingPrefill:
     @property
     def remaining(self) -> int:
         return self.target - self.done
+
+    @property
+    def remaining_requests(self) -> int:
+        return len(self.chosen)
+
+
+@dataclasses.dataclass
+class PagedPendingPrefill:
+    """A chunked admission on the paged backend. No shared clock, so no
+    catch-up recurrence and no left-padding: each chosen request's
+    completion target is its OWN prompt length. Entries are consumed
+    strictly in admission order — the current entry's unshared suffix
+    (shared-prefix blocks were pinned and gathered into the side cache
+    before its first chunk) is chunk-prefilled on a 1-row side cache
+    across engine steps, and on completion its rows are scattered into
+    the slot's reserved blocks and the slot starts decoding immediately
+    while later entries keep chunking. Every entry's full block budget is
+    reserved at creation (``reserve_pending``) so resident decode
+    allocations can never starve the in-flight admission."""
+    chosen: List[Tuple[int, Request]]   # (order, request), consumed in order
+    slot_ids: List[int]                 # reserved slot per entry
+    version: int                        # weight version pinned at creation
+    entry: int = 0                      # index of the in-progress entry
+    lp: int = 0                         # entry's shared-prefix length
+    done: int = 0                       # suffix positions consumed (entry)
+    suffix: Any = None                  # entry's unshared suffix (np.int32)
+    cache: Any = None                   # 1-row side cache (None: not begun)
+    logits: Any = None                  # last chunk's final-token logits
+    entry_ms: float = 0.0               # accumulated chunk wall time (entry)
+    chunks: int = 0                     # chunk forwards issued (entry)
+
+    @property
+    def remaining_requests(self) -> int:
+        return len(self.chosen) - self.entry
 
 
 class _SchedulerBase:
@@ -373,7 +418,8 @@ class ContinuousScheduler(_SchedulerBase):
                     drain_t0 = time.perf_counter()
                     self.drains += 1
                     in_flight = len(active_ids) + (
-                        len(self._pending.chosen) if self._pending else 0)
+                        self._pending.remaining_requests
+                        if self._pending else 0)
                     self.store.note_drain(in_flight)
                 elapsed_ms = (time.perf_counter() - drain_t0) * 1e3
                 deadline = cfg.swap_deadline_ms
@@ -441,8 +487,11 @@ class ContinuousScheduler(_SchedulerBase):
             if self._pending is not None:
                 chunk_ms = self._advance_pending(params)
                 p = self._pending
-                if p.done >= p.target and (self.kv.clock == p.target
-                                           or not active_ids):
+                # paged pendings complete per-entry inside the advance (no
+                # completion-clock rendezvous); only the contiguous pending
+                # waits here for the shared clock to reach its target
+                if isinstance(p, PendingPrefill) and p.done >= p.target \
+                        and (self.kv.clock == p.target or not active_ids):
                     self._scatter_pending(p)
 
             active_ids = [i for i, s in enumerate(self.slots)
@@ -515,7 +564,25 @@ class ContinuousScheduler(_SchedulerBase):
         """Pick requests for a chunked admission and commit its pad-to
         clock. Fresh waves reuse the contiguous pick (frozen clock: the
         wave's padding is the target); mid-flight picks grow the set under
-        the solved target, re-checking every earlier choice as it rises."""
+        the solved target, re-checking every earlier choice as it rises.
+
+        Paged backend: no clock to solve — ``kv.pick`` applies for fresh
+        AND mid-flight picks alike (each entry's target is its own prompt
+        length), and every entry's block budget is reserved up front."""
+        if self.kv.backend == "paged":
+            chosen, _ = self.kv.pick(queue, len(free_ids), fresh,
+                                     limit_head)
+            if not chosen:
+                return []
+            if fresh:
+                self.waves += 1
+            slot_ids = list(free_ids[:len(chosen)])
+            for (_, r), slot in zip(chosen, slot_ids):
+                self.kv.reserve_pending(slot, r)
+            self._pending = PagedPendingPrefill(
+                chosen=chosen, slot_ids=slot_ids, version=version)
+            self.pendings_started += 1
+            return chosen
         max_len = self.cfg.max_len
         if fresh:
             chosen, target = self.kv.pick(queue, len(free_ids), True, False)
@@ -558,6 +625,8 @@ class ContinuousScheduler(_SchedulerBase):
         """Consume up to ``prefill_chunk`` positions of the pending's
         padded prompt on the side cache; returns the chunk's wall time."""
         p = self._pending
+        if isinstance(p, PagedPendingPrefill):
+            return self._advance_pending_paged(params)
         n = min(self.chunk, p.remaining)
         if n <= 0:
             return 0.0
@@ -577,6 +646,61 @@ class ContinuousScheduler(_SchedulerBase):
         p.chunks += 1
         p.done += n
         self.chunk_steps += 1
+        return ms
+
+    def _advance_pending_paged(self, params) -> float:
+        """One chunk step of the current paged pending entry. The first
+        step pins + gathers the entry's shared prefix (``begin_chunked_
+        admit``); each step consumes up to ``prefill_chunk`` unshared
+        suffix positions on the 1-row side cache (batch 1, unpadded — the
+        monolithic admission shapes, so greedy tokens are bit-identical
+        for any chunk split); a completed entry scatters into its reserved
+        blocks and starts decoding immediately while later entries keep
+        chunking. Returns the step's chunk wall time."""
+        p = self._pending
+        _, r = p.chosen[p.entry]
+        slot = p.slot_ids[p.entry]
+        t0 = time.perf_counter()
+        if p.cache is None:
+            p.lp, p.cache = self.kv.begin_chunked_admit(slot, r)
+            p.suffix = np.asarray(
+                [int(t) for t in r.prompt[p.lp:]], np.int32)
+            p.done = 0
+            p.chunks = 0
+            p.entry_ms = 0.0
+        n = min(self.chunk, len(p.suffix) - p.done)
+        toks = jnp.asarray(p.suffix[None, p.done:p.done + n])
+        # synchronous for the same tail-bounding reason as the contiguous
+        # path: chunks must not queue up behind the in-flight decode
+        p.logits, p.cache = self.eng._prefill_chunk(
+            params, {"tokens": toks}, p.cache)
+        jax.block_until_ready(p.logits)
+        p.done += n
+        p.chunks += 1
+        self.chunk_steps += 1
+        if p.done >= len(p.suffix):
+            self.kv.complete_chunked_admit(slot, r, p.lp, p.cache,
+                                           p.logits)
+            ms = (time.perf_counter() - t0) * 1e3
+            p.entry_ms += ms
+            order = p.chosen[p.entry][0]
+            self.slots[slot] = _Slot(
+                order=order, req=r, version=p.version,
+                clock0=len(r.prompt), t0=time.perf_counter(),
+                prefill_ms=p.entry_ms, swap_ms=self._pending_swap_ms)
+            self.admission_log.append(
+                {"request_id": r.request_id, "slot": slot,
+                 "clock": len(r.prompt), "version": p.version,
+                 "chunks": p.chunks})
+            self.admitted += 1
+            p.entry += 1
+            p.cache = None
+            if p.entry >= len(p.chosen):
+                self._pending_swap_ms = 0.0
+                self._pending = None
+            return ms
+        ms = (time.perf_counter() - t0) * 1e3
+        p.entry_ms += ms
         return ms
 
     def _scatter_pending(self, p: PendingPrefill) -> None:
@@ -604,10 +728,21 @@ class ContinuousScheduler(_SchedulerBase):
         """A force-swap lands while a chunked admission is mid-prefill: its
         chunks ran on the outgoing weights, so drop the side cache and
         return its requests to the front of the queue in FCFS order (they
-        re-admit under the new version)."""
+        re-admit under the new version).
+
+        Paged backend: entries that already completed are live slots and
+        drain/swap like any resident; the not-yet-complete entries must
+        also release their reserved-block budgets and unpin their
+        shared-prefix blocks (``abandon_chunked_admit``) — dropping only
+        the side cache would leak both until pool exhaustion."""
         p = self._pending
-        for item in reversed(p.chosen):
-            queue.appendleft(item)
+        if isinstance(p, PagedPendingPrefill):
+            for j in range(len(p.chosen) - 1, p.entry - 1, -1):
+                self.kv.abandon_chunked_admit(p.slot_ids[j])
+                queue.appendleft(p.chosen[j])
+        else:
+            for item in reversed(p.chosen):
+                queue.appendleft(item)
         self._pending = None
         self.pendings_abandoned += 1
 

@@ -271,9 +271,10 @@ def test_config_validation():
     with pytest.raises(NotImplementedError, match="quantized KV"):
         ServeConfig(scheduler="continuous", kv_backend="paged",
                     quantize_kv=True)
-    with pytest.raises(NotImplementedError, match="monolithic"):
-        ServeConfig(scheduler="continuous", kv_backend="paged",
-                    prefill_chunk=8)
+    # paged × chunked admission is supported now (PR 7) — constructs fine
+    cfg = ServeConfig(scheduler="continuous", kv_backend="paged",
+                      prefill_chunk=8)
+    assert cfg.prefill_chunk == 8 and cfg.kv_backend == "paged"
     with pytest.raises(ValueError, match="kv_backend"):
         ServeConfig(kv_backend="banana")
     with pytest.raises(ValueError, match="prefill_chunk"):
