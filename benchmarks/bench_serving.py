@@ -38,6 +38,14 @@ every request in a round waits for the round's longest):
   tokens must be bit-identical to monolithic paged admission (verified);
   the chunked/monolithic p99 decode step-time ratio is held to the same
   bar as the contiguous chunked-prefill experiment.
+* **kv bytes** — 32-slot paged decode with an fp32 KV pool vs an int8
+  one (``quantize_kv=True``, the fused dequant-attention kernel path).
+  Decode at production slot counts is roofline-bound on KV-cache HBM
+  bytes per token; the int8 pool moves ``2*D + 8`` bytes per (position,
+  kv-head, layer) instead of ``2*D*itemsize`` (acceptance: ≤ 0.6x fp).
+  Quantized-KV tokens are NOT bit-identical to fp — the tolerance-
+  equivalence harness measures teacher-forced greedy-token agreement vs
+  the fp paged oracle instead (hard floor: ≥ 0.98).
 
 Writes ``BENCH_serving.json`` (or ``--smoke`` scale for the CI bench
 gate, compared against the committed baseline by
@@ -539,6 +547,86 @@ def bench_paged_chunked(smoke: bool = False, repeats: int = 4,
     return out
 
 
+def kv_bytes_workload():
+    """32 slots of distinct mid-length prompts decoding in lockstep —
+    the all-residents-decoding shape where KV-cache HBM traffic owns the
+    roofline. Fixed-size at every scale: the bytes-per-position ratio is
+    dtype arithmetic and the agreement rate needs enough compared tokens
+    (32 slots x 24 tokens = 768) for a per-mille flip rate to resolve."""
+    slots, plen, new = 32, 48, 24
+    rng = np.random.default_rng(21)
+    reqs = [Request(prompt=[int(t) for t in rng.integers(1, 500, size=plen)],
+                    max_new_tokens=new, request_id=i)
+            for i in range(slots)]
+    return reqs, dict(max_len=128, block_size=16, slots=slots,
+                      prompt_len=plen, new_tokens=new)
+
+
+def bench_kv_bytes(smoke: bool = False, repeats: int = 3,
+                   report=print) -> Dict:
+    """fp32 vs int8 KV pools on the 32-slot paged decode workload.
+
+    Reports device bytes per cached position (all layers, from the live
+    pool), the KV bytes a decode step reads per token (bytes/position x
+    mean context length — identical contexts in both runs, so the ratio
+    is exactly the dtype ratio), throughput, and the teacher-forced
+    greedy-token agreement of the int8 config vs the fp oracle
+    (``repro.serving.equivalence``; both engines are deterministic greedy,
+    so the rate is reproducible). ``smoke`` is accepted for signature
+    parity but changes nothing — see :func:`kv_bytes_workload`."""
+    del smoke
+    from repro.serving.equivalence import (greedy_token_agreement,
+                                           oracle_tokens)
+    model, params = _tail_model()
+    reqs, wl = kv_bytes_workload()
+    new_tokens = sum(r.max_new_tokens for r in reqs)
+    # context length while decoding token t is prompt_len + t
+    mean_ctx = wl["prompt_len"] + (wl["new_tokens"] - 1) / 2
+    out: Dict = dict(wl, mean_context_len=mean_ctx)
+    engines: Dict[str, ServeEngine] = {}
+    oracle = None
+    for label, quant in (("fp", False), ("int8", True)):
+        eng = ServeEngine(model, params,
+                          ServeConfig(max_batch=wl["slots"],
+                                      max_len=wl["max_len"],
+                                      max_slots=wl["slots"],
+                                      scheduler="continuous",
+                                      kv_backend="paged",
+                                      block_size=wl["block_size"],
+                                      quantize_kv=quant))
+        outs = eng.generate(reqs)                # warm every jit shape
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            outs = eng.generate(reqs)
+            best = min(best, time.perf_counter() - t0)
+        if label == "fp":
+            oracle = oracle_tokens(outs)
+        kv = eng.scheduler.stats()["kv"]
+        engines[label] = eng
+        m = {"tok_s": new_tokens / best, "wall_ms": best * 1e3,
+             "bytes_per_position": kv["bytes_per_position"],
+             "kv_bytes_per_token": kv["bytes_per_position"] * mean_ctx,
+             "pool_bytes": kv["pool_bytes"]}
+        out[label] = m
+        report(f"[serving] kv-bytes {label:5s}: {m['tok_s']:7.0f} tok/s, "
+               f"{m['bytes_per_position']} B/position "
+               f"({m['kv_bytes_per_token'] / 1024:.0f} KiB read/token, "
+               f"pool {m['pool_bytes'] / 2**20:.1f} MiB)")
+    agreement = greedy_token_agreement(engines["int8"], reqs, oracle)
+    for eng in engines.values():
+        eng.close()
+    out["agreement"] = agreement.rate
+    out["agreement_compared"] = agreement.compared
+    out["bytes_ratio"] = out["int8"]["bytes_per_position"] \
+        / out["fp"]["bytes_per_position"]
+    out["throughput_ratio"] = out["int8"]["tok_s"] / out["fp"]["tok_s"]
+    report(f"[serving] kv-bytes int8/fp: bytes {out['bytes_ratio']:.2f}x, "
+           f"throughput {out['throughput_ratio']:.2f}x, greedy agreement "
+           f"{out['agreement']:.4f} over {out['agreement_compared']} tokens")
+    return out
+
+
 def run(report=print, smoke: bool = False,
         out_path: str = "BENCH_serving.json") -> Dict:
     results = {"smoke": smoke,
@@ -549,7 +637,8 @@ def run(report=print, smoke: bool = False,
                "shared_prefix": bench_shared_prefix(smoke=smoke,
                                                     report=report),
                "paged_chunked": bench_paged_chunked(smoke=smoke,
-                                                    report=report)}
+                                                    report=report),
+               "kv_bytes": bench_kv_bytes(smoke=smoke, report=report)}
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
     report(f"[serving] wrote {out_path}")

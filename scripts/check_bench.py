@@ -12,6 +12,9 @@ admission spike, a paged KV cache that stopped reusing prefixes), not
 wall-clock noise across runners. Some hard floors are absolute: chunked
 greedy tokens must stay bit-identical to the monolithic path (contiguous
 and paged admission alike) and paged tokens to the contiguous backend;
+the int8-KV config's teacher-forced greedy agreement vs the fp paged
+oracle must stay at or above its 0.98 tolerance budget and its
+bytes-per-position ratio at or under 0.6x fp;
 the *committed baseline's* chunked/monolithic p99 ratios must stay at or
 under 0.5x and its
 shared-prefix paged/contiguous throughput ratio at or above 1.3x (the
@@ -144,6 +147,35 @@ def main() -> None:
     check("serving.paged-chunked.p99-ratio", ratio <= cap,
           f"chunked/monolithic p99 step-time {ratio:.2f}x "
           f"(baseline {base_ratio:.2f}x, cap {cap:.2f}x)")
+
+    # --- serving: the int8 KV pool must keep its bytes win AND its
+    # greedy-agreement budget (the tolerance-equivalence harness's first
+    # enforced contract: quantized-KV tokens are not bit-identical, so the
+    # hard floor is teacher-forced agreement vs the fp paged oracle) ------
+    fk, bk = fresh_serving["kv_bytes"], base_serving["kv_bytes"]
+    check("serving.kv-bytes.baseline-acceptance",
+          bk["bytes_ratio"] <= 0.6,
+          f"committed int8/fp bytes-per-position ratio "
+          f"{bk['bytes_ratio']:.2f}x (bar 0.60x)")
+    check("serving.kv-bytes.bytes-ratio", fk["bytes_ratio"] <= 0.6,
+          f"int8/fp bytes-per-position {fk['bytes_ratio']:.2f}x "
+          "(cap 0.60x)")
+    # agreement is a hard floor on BOTH the committed baseline and the
+    # fresh run: 0.98 is the per-config budget quantized KV serves under
+    check("serving.kv-bytes.baseline-agreement", bk["agreement"] >= 0.98,
+          f"committed greedy agreement {bk['agreement']:.4f} (floor 0.98)")
+    check("serving.kv-bytes.agreement", fk["agreement"] >= 0.98,
+          f"int8-KV greedy agreement {fk['agreement']:.4f} over "
+          f"{fk['agreement_compared']} tokens (floor 0.98)")
+    # throughput: int8 dequant must stay roughly free — the committed
+    # baseline keeps a 0.5x bar, the fresh run the usual structural floor
+    ratio, base_ratio = fk["throughput_ratio"], bk["throughput_ratio"]
+    check("serving.kv-bytes.baseline-throughput", base_ratio >= 0.5,
+          f"committed int8/fp throughput {base_ratio:.2f}x (bar 0.50x)")
+    floor = min(base_ratio / 2, 0.4)
+    check("serving.kv-bytes.throughput-ratio", ratio >= floor,
+          f"int8/fp throughput {ratio:.2f}x (baseline {base_ratio:.2f}x, "
+          f"floor {floor:.2f}x)")
 
     # --- reload: staging/swap latency on the fixed-size workloads --------
     for wl in ("toy_cnn", "reduced_lm"):

@@ -36,6 +36,16 @@ resident decode tails flat while long shared-prefix prompts admit:
 
     python -m repro.launch.serve --scheduler continuous --max-slots 8 \
         --kv-backend paged --block-size 16 --prefill-chunk 16
+
+Quantized KV (``--quant-kv``) composes with both: the paged pool stores
+int8 codes plus per-(position, head) scales (~0.27x fp32 bytes/position at
+full widths) and decode runs the fused dequant-attention kernel. Tokens
+are tolerance-equivalent, not bit-identical — pass ``--verify-agreement``
+to measure teacher-forced greedy agreement against an fp-KV oracle engine
+(the per-config budget is 0.98, see ``repro.serving.equivalence``):
+
+    python -m repro.launch.serve --scheduler continuous --max-slots 8 \
+        --kv-backend paged --quant-kv --prefill-chunk 16 --verify-agreement
 """
 from __future__ import annotations
 
@@ -58,7 +68,15 @@ def main():
                     choices=[None, "rtn", "squant", "squant_e", "squant_ek",
                              "squant_ec"])
     ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--quant-kv", action="store_true")
+    ap.add_argument("--quant-kv", action="store_true",
+                    help="int8 KV cache with per-(position, head) scales; "
+                         "composes with --kv-backend paged (fused dequant "
+                         "decode kernel) and --prefill-chunk")
+    ap.add_argument("--verify-agreement", action="store_true",
+                    help="continuous + --quant-kv: after serving, replay "
+                         "the prompts teacher-forced against an fp-KV "
+                         "oracle engine and report greedy-token agreement "
+                         "(budget 0.98 at production widths)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--scheduler", default="round",
@@ -162,6 +180,28 @@ def main():
                   f"active), prefix hits={kv['prefix_hits']} "
                   f"({kv['prefix_tokens_reused']} tokens reused), "
                   f"cow={kv['cow_copies']} evictions={kv['evictions']}")
+            print(f"[serve] kv pool: "
+                  f"{'int8+scales' if kv['quantize_kv'] else 'fp'} "
+                  f"{kv['pool_bytes'] / 1e6:.2f} MB "
+                  f"({kv['bytes_per_position']} B/position)")
+    if args.verify_agreement:
+        if args.scheduler != "continuous" or not args.quant_kv:
+            print("[serve] --verify-agreement needs --scheduler continuous "
+                  "and --quant-kv; skipping")
+        else:
+            from repro.serving.equivalence import (agreement_budget,
+                                                   greedy_token_agreement,
+                                                   oracle_tokens)
+            oracle_eng = ServeEngine(
+                model, params,
+                dataclasses.replace(eng.cfg, quantize_kv=False))
+            oracle = oracle_tokens(oracle_eng.generate(reqs))
+            oracle_eng.close()
+            rep = greedy_token_agreement(eng, reqs, oracle)
+            budget = agreement_budget(eng.cfg)
+            print(f"[serve] greedy agreement vs fp-KV oracle: "
+                  f"{rep.rate:.4f} ({rep.matched}/{rep.compared} tokens, "
+                  f"budget {budget:.2f} at production widths)")
     for err in w["errors"]:
         print(f"[serve] reload error: {err}")
     eng.close()

@@ -102,10 +102,19 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
 
 
 def _quant_tok(x):
-    """(B, S, KV, D) → int8 codes + per-(B,S,KV) scale."""
+    """(..., KV, D) → int8 codes + per-(..., KV) scale.
+
+    Per-(token, head) absmax scales with a 1e-6 floor, so all-zero rows
+    quantize to exact zeros instead of 0/0 NaNs. Codes are clipped to
+    [-127, 127] before the int8 cast: ``round(amax / scale)`` can land on
+    128.0 under fp rounding, which would wrap to -128 — flipping the
+    row's largest-magnitude element to the wrong sign. Pure elementwise +
+    one reduction over the trailing axis, so it vmaps/jits over any
+    leading shape (both serving backends share this one quantizer)."""
     amax = jnp.max(jnp.abs(x), axis=-1)
     scale = jnp.maximum(amax, 1e-6) / 127.0
-    codes = jnp.round(x / scale[..., None]).astype(jnp.int8)
+    codes = jnp.clip(jnp.round(x / scale[..., None]),
+                     -127.0, 127.0).astype(jnp.int8)
     return codes, scale.astype(jnp.float32)
 
 
@@ -316,19 +325,37 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
         # slots point at the trash block and are masked out by length),
         # then attend via the gather kernel — exact-zero contributions from
         # masked columns keep tokens bit-identical to the contiguous
-        # oracle at equal effective context (nb * bs == max_len)
-        from repro.kernels.paged_attention import paged_attention
+        # oracle at equal effective context (nb * bs == max_len). With a
+        # quantized pool the new row is quantized per-(token, head) before
+        # the write (the same ``_quant_tok`` the contiguous cache uses) and
+        # attention runs through the fused int8-dequant kernel; tokens are
+        # then tolerance-equivalent, not bit-identical (see
+        # repro.serving.equivalence).
         bs_blk = cache["k"].shape[1]
         rows = jnp.arange(b)
         phys = block_tables[rows, pos // bs_blk]
         off = pos % bs_blk
         cache = dict(cache)
-        cache["k"] = cache["k"].at[phys, off].set(
-            k[:, 0].astype(cache["k"].dtype))
-        cache["v"] = cache["v"].at[phys, off].set(
-            v[:, 0].astype(cache["v"].dtype))
-        out = paged_attention(q[:, 0], cache["k"], cache["v"],
-                              block_tables, pos, scale=scale)[:, None]
+        if "k_scale" in cache:
+            from repro.kernels.paged_attention_quant import \
+                paged_attention_quant
+            kq, ks = _quant_tok(k)
+            vq, vs = _quant_tok(v)
+            cache["k"] = cache["k"].at[phys, off].set(kq[:, 0])
+            cache["v"] = cache["v"].at[phys, off].set(vq[:, 0])
+            cache["k_scale"] = cache["k_scale"].at[phys, off].set(ks[:, 0])
+            cache["v_scale"] = cache["v_scale"].at[phys, off].set(vs[:, 0])
+            out = paged_attention_quant(
+                q[:, 0], cache["k"], cache["v"], cache["k_scale"],
+                cache["v_scale"], block_tables, pos, scale=scale)[:, None]
+        else:
+            from repro.kernels.paged_attention import paged_attention
+            cache["k"] = cache["k"].at[phys, off].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[phys, off].set(
+                v[:, 0].astype(cache["v"].dtype))
+            out = paged_attention(q[:, 0], cache["k"], cache["v"],
+                                  block_tables, pos, scale=scale)[:, None]
     else:  # decode: s == 1, absolute position ``pos``
         cache = _cache_write(cache, k, v, pos, cfg.window)
         kc, vc = _cache_read(cache)

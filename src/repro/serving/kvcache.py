@@ -597,8 +597,15 @@ class PagedKVCache(KVCache):
 
     def _ensure_pool(self, lg) -> None:
         if self._cache is None:
+            # the pool inherits the config's KV dtype (int8 codes +
+            # per-(position, kv-head) scale pools under quantize_kv) —
+            # hardcoding quantize_kv=False here silently scattered fp side
+            # caches into an fp pool while ``fresh()``/``side_cache()``
+            # honored the flag, which is exactly the dtype split the
+            # regression test in tests/test_kvcache_paged.py pins down
             self._cache = self.model.init_cache(
-                self.num_blocks, self.block_size, quantize_kv=False)
+                self.num_blocks, self.block_size,
+                quantize_kv=self.cfg.quantize_kv)
             self._logits = jnp.zeros((self.max_slots, lg.shape[-1]),
                                      lg.dtype)
 
@@ -815,10 +822,26 @@ class PagedKVCache(KVCache):
                              jax.tree_util.tree_leaves(self._cache[key]))
         return total // self.num_blocks
 
+    def bytes_per_position(self) -> int:
+        """Device KV bytes per cached position (all layers) — the unit
+        decode attention's HBM traffic scales with: each step reads the
+        slot's whole context at this rate. int8 pools pay
+        ``2*D + 2*itemsize(scale)`` per (position, kv-head, layer) vs
+        ``2*D*itemsize`` for fp pools."""
+        return self.block_bytes() // self.block_size if self.block_size \
+            else 0
+
+    def pool_bytes(self) -> int:
+        """Total device bytes held by the block pool (all layers)."""
+        return self.block_bytes() * self.num_blocks
+
     def stats(self) -> Dict[str, Any]:
         free, cached = len(self._free), len(self._cached)
         return {"backend": self.backend,
+                "quantize_kv": self.cfg.quantize_kv,
                 "block_size": self.block_size,
+                "bytes_per_position": self.bytes_per_position(),
+                "pool_bytes": self.pool_bytes(),
                 "blocks_total": self.num_blocks,
                 "blocks_free": free,
                 "blocks_cached": cached,

@@ -342,7 +342,7 @@ class ContinuousScheduler(_SchedulerBase):
                 "models yet (per-slot encoder outputs have admission-"
                 "dependent lengths); use scheduler='round'")
         self.chunk = int(self.cfg.prefill_chunk or 0)
-        # config-only feasibility (chunk >= 0, chunk/paged vs quantized KV)
+        # config-only feasibility (chunk >= 0, paged backend shape rules)
         # is validated in ServeConfig.__post_init__; only model-dependent
         # gates live here
         if self.chunk and not self.model.supports_chunked_prefill():
@@ -365,6 +365,13 @@ class ContinuousScheduler(_SchedulerBase):
         #                               was built under (flush on change)
         self._pending: Optional[PendingPrefill] = None
         self._head_skips = 0          # FCFS-with-skip starvation guard
+        # tolerance-equivalence hook (repro.serving.equivalence): when set,
+        # called per (request_id, position, proposed_token) right after
+        # sampling; a non-None return replaces the token BOTH in the slot's
+        # record and in the decode feed — teacher-forcing the oracle's
+        # continuation so greedy-token agreement is measured per step
+        # without divergence compounding
+        self.token_override = None
         self._last_emit_t: Optional[float] = None
         # observability
         self.admitted = 0
@@ -507,6 +514,16 @@ class ContinuousScheduler(_SchedulerBase):
             self.eng._key, sk = jax.random.split(self.eng._key)
             nxt = sample(self.kv.logits, sk, cfg.temperature, cfg.top_k)
             nxt_np = np.asarray(nxt)
+            if self.token_override is not None:
+                nxt_np = nxt_np.copy()
+                for i in active_ids:
+                    s = self.slots[i]
+                    ov = self.token_override(s.req.request_id,
+                                             len(s.tokens),
+                                             int(nxt_np[i]))
+                    if ov is not None:
+                        nxt_np[i] = ov
+                nxt = jnp.asarray(nxt_np)
             recorded = 0
             t_now = time.perf_counter()
             step_ms = (t_now - self._last_emit_t) * 1e3

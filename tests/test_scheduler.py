@@ -499,8 +499,10 @@ def test_starvation_guard_bounds_head_skips(scheduler_chunk):
 
 def test_chunked_rejected_for_unsupported_stacks():
     """Chunk continuations are only exact for plain-attention dense stacks;
-    everything else must be rejected up front, as must quantized KV caches
-    (chunks would attend to dequantized prefix keys)."""
+    everything else must be rejected up front. Quantized KV caches are no
+    longer in that list: chunks attending to dequantized prefix keys is
+    exactly what the int8 serving path does, held to the agreement budget
+    in repro.serving.equivalence instead of bit-identity."""
     cfg = get_config("mixtral-8x7b", reduced=True)   # window + MoE
     cfg = dataclasses.replace(cfg, dtype="float32")
     model = build_model(cfg)
@@ -509,11 +511,16 @@ def test_chunked_rejected_for_unsupported_stacks():
         ServeEngine(model, params,
                     ServeConfig(max_batch=2, max_len=32,
                                 scheduler="continuous", prefill_chunk=4))
+    # quantize_kv × prefill_chunk composes now (PR-8 gate lift): the
+    # engine constructs and serves rather than raising
     tiny_model, tiny_params = _tiny()
-    with pytest.raises(NotImplementedError, match="quantized KV"):
-        ServeEngine(tiny_model, tiny_params,
-                    ServeConfig(max_batch=2, max_len=32, quantize_kv=True,
-                                scheduler="continuous", prefill_chunk=4))
+    eng = ServeEngine(tiny_model, tiny_params,
+                      ServeConfig(max_batch=2, max_len=32, quantize_kv=True,
+                                  scheduler="continuous", prefill_chunk=4))
+    outs = eng.generate([Request(prompt=[1, 2, 3, 4, 5, 6],
+                                 max_new_tokens=4, request_id=0)])
+    assert len(outs[0].tokens) == 4
+    assert eng.trace_counts["prefill_chunk"] > 0
 
 
 # ---------------------------------------------------------------------------
