@@ -15,9 +15,12 @@ and paged admission alike) and paged tokens to the contiguous backend;
 the int8-KV config's teacher-forced greedy agreement vs the fp paged
 oracle must stay at or above its 0.98 tolerance budget and its
 bytes-per-position ratio at or under 0.6x fp;
+self-speculative tokens must stay bit-identical to w8-only decode at
+every draft bit-width measured;
 the *committed baseline's* chunked/monolithic p99 ratios must stay at or
-under 0.5x and its
-shared-prefix paged/contiguous throughput ratio at or above 1.3x (the
+under 0.5x, its
+shared-prefix paged/contiguous throughput ratio at or above 1.3x, and
+its speculative/w8-only throughput ratio at or above 1.0x (the
 acceptance bars those PRs landed — re-committing a degraded baseline
 fails the gate; the fresh runs get the usual generous tolerance against
 it). Fresh JSONs are written to ``--out-dir`` and uploaded as CI
@@ -176,6 +179,40 @@ def main() -> None:
     check("serving.kv-bytes.throughput-ratio", ratio >= floor,
           f"int8/fp throughput {ratio:.2f}x (baseline {base_ratio:.2f}x, "
           f"floor {floor:.2f}x)")
+
+    # --- serving: self-speculative decode must stay bit-identical and
+    # keep paying for itself ----------------------------------------------
+    fsp, bsp = fresh_serving["speculative"], base_serving["speculative"]
+    # token identity is the tentpole contract — a hard floor on every
+    # draft bit-width measured, fresh and committed alike
+    check("serving.speculative.tokens-identical", fsp["tokens_identical"],
+          "draft-assisted tokens == w8-only tokens (all bit-widths)")
+    check("serving.speculative.baseline-tokens-identical",
+          bsp["tokens_identical"],
+          "committed baseline tokens_identical")
+    # the committed baseline must show speculation actually paying:
+    # headline throughput >= 1.0x w8-only (the PR's acceptance bar);
+    # the fresh run gets the usual generous structural tolerance
+    ratio, base_ratio = fsp["throughput_ratio"], bsp["throughput_ratio"]
+    check("serving.speculative.baseline-acceptance", base_ratio >= 1.0,
+          f"committed speculative/w8 throughput {base_ratio:.2f}x "
+          "(bar 1.00x)")
+    floor = min(base_ratio / 2, 0.7)
+    check("serving.speculative.throughput-ratio", ratio >= floor,
+          f"speculative/w8 throughput {ratio:.2f}x "
+          f"(baseline {base_ratio:.2f}x, floor {floor:.2f}x)")
+    # acceptance rate is scale-free (a property of the draft/verifier
+    # pair on the fixed workload); hold fresh runs near the baseline
+    acc, bacc = (fsp["speculative"]["acceptance_rate"],
+                 bsp["speculative"]["acceptance_rate"])
+    check("serving.speculative.acceptance-rate", acc >= bacc / 2,
+          f"draft acceptance {acc:.2f} (baseline {bacc:.2f}, "
+          f"floor {bacc / 2:.2f})")
+    # steps-per-token is the mechanism: speculation must keep taking
+    # fewer engine steps than verifier-only decode
+    check("serving.speculative.steps-ratio", fsp["steps_ratio"] < 1.0,
+          f"speculative/w8 engine steps {fsp['steps_ratio']:.2f}x "
+          "(must be < 1.0x)")
 
     # --- reload: staging/swap latency on the fixed-size workloads --------
     for wl in ("toy_cnn", "reduced_lm"):

@@ -46,6 +46,18 @@ to measure teacher-forced greedy agreement against an fp-KV oracle engine
 
     python -m repro.launch.serve --scheduler continuous --max-slots 8 \
         --kv-backend paged --quant-kv --prefill-chunk 16 --verify-agreement
+
+Self-speculative decoding (``--speculative``): a ``--draft-bits``
+quantization of the SAME checkpoint autoregressively proposes
+``--draft-k``-token runs per slot, the serving tree verifies all
+positions in one batched forward, and the longest matching prefix is
+accepted. Greedy acceptance keeps tokens bit-identical to verifier-only
+decode; the run ends with the draft acceptance printout. Requires the
+paged backend and greedy sampling (not --quant-kv):
+
+    python -m repro.launch.serve --scheduler continuous --max-slots 8 \
+        --kv-backend paged --quantize squant --bits 8 \
+        --speculative --draft-bits 4 --draft-k 4
 """
 from __future__ import annotations
 
@@ -111,6 +123,19 @@ def main():
                     help="paged: physical blocks in the pool incl. the "
                          "trash block (0: full capacity, no admission "
                          "backpressure)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding (paged + continuous + "
+                         "greedy): a --draft-bits quantization of the same "
+                         "checkpoint drafts --draft-k-token runs, the "
+                         "serving tree verifies them in one batched "
+                         "forward; tokens stay bit-identical to "
+                         "verifier-only decode")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="speculative: bit-width of the drafter "
+                         "quantization (the verifier serves at --bits)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative: draft tokens proposed per verify "
+                         "cycle")
     ap.add_argument("--prompts", nargs="*", default=["hello world"])
     ap.add_argument("--reload-from", default=None, metavar="CKPT_DIR",
                     help="watch this checkpoint dir and hot-swap new "
@@ -140,7 +165,10 @@ def main():
                                   prefill_chunk=args.prefill_chunk,
                                   kv_backend=args.kv_backend,
                                   block_size=args.block_size,
-                                  kv_blocks=args.kv_blocks))
+                                  kv_blocks=args.kv_blocks,
+                                  speculative=args.speculative,
+                                  draft_bits=args.draft_bits,
+                                  draft_k=args.draft_k))
     if eng.quant_report:
         print("[serve]", eng.quant_report.summary())
     if args.reload_from:
@@ -184,6 +212,14 @@ def main():
                   f"{'int8+scales' if kv['quantize_kv'] else 'fp'} "
                   f"{kv['pool_bytes'] / 1e6:.2f} MB "
                   f"({kv['bytes_per_position']} B/position)")
+        if sch["speculative"]:
+            al = sch["accepted_len"]
+            print(f"[serve] speculative: {sch['spec_cycles']} verify "
+                  f"cycles, {sch['draft_tokens_accepted']}/"
+                  f"{sch['draft_tokens_proposed']} drafts accepted "
+                  f"(rate {sch['acceptance_rate']:.2f}), accepted-len "
+                  f"p50/p95 = {al.get('p50', 0.0):.1f}/"
+                  f"{al.get('p95', 0.0):.1f} tokens/cycle")
     if args.verify_agreement:
         if args.scheduler != "continuous" or not args.quant_kv:
             print("[serve] --verify-agreement needs --scheduler continuous "

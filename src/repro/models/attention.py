@@ -275,14 +275,14 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
     :mod:`repro.kernels.paged_attention`).
     """
     if cfg.mla is not None:
-        if mode == "chunk":
+        if mode in ("chunk", "verify"):
             raise NotImplementedError(
-                "chunked prefill is not implemented for MLA attention")
+                f"{mode!r} mode is not implemented for MLA attention")
         return _mla_attention(params, x, cfg=cfg, rope=rope, mode=mode,
                               cache=cache, pos=pos)
-    if mode == "chunk" and cfg.window:
+    if mode in ("chunk", "verify") and cfg.window:
         raise NotImplementedError(
-            "chunked prefill is not implemented for sliding-window "
+            f"{mode!r} mode is not implemented for sliding-window "
             "ring-buffer caches")
     b, s, d = x.shape
     hd = cfg.head_dim
@@ -319,6 +319,37 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
                                  scale=scale, causal=True, window=None,
                                  q_chunk=cfg.attn_q_chunk,
                                  unroll=cfg.unroll_chunks, row0=pos)
+    elif mode == "verify":  # paged multi-position verify: pos is (B,)
+        # speculative decoding's verifier forward: slot b's S tokens are
+        # written through the block table at absolute positions
+        # pos[b]..pos[b]+S-1, then every row attends over its own
+        # inclusive prefix via ONE flattened paged_attention call — row
+        # (b, j) becomes batch row b*S+j with length pos[b]+j, the exact
+        # (query, keys, mask) triple a lockstep decode step at that
+        # position would see, which is what makes greedy verify tokens
+        # bit-identical to verifier-only decode
+        if block_tables is None:
+            raise NotImplementedError(
+                "verify mode requires the paged KV layout (block tables); "
+                "the contiguous cache has one shared clock and cannot "
+                "score per-slot multi-position runs")
+        if "k_scale" in cache:
+            raise NotImplementedError(
+                "verify mode requires an fp KV pool (speculative "
+                "acceptance is gated off quantize_kv)")
+        from repro.kernels.paged_attention import paged_attention
+        bs_blk = cache["k"].shape[1]
+        idx = pos[:, None] + jnp.arange(s)               # (B, S) abs pos
+        rows = jnp.arange(b)
+        phys = block_tables[rows[:, None], idx // bs_blk]
+        off = idx % bs_blk
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype))
+        out = paged_attention(
+            q.reshape(b * s, cfg.n_heads, hd), cache["k"], cache["v"],
+            jnp.repeat(block_tables, s, axis=0), idx.reshape(-1),
+            scale=scale).reshape(b, s, cfg.n_heads, hd)
     elif block_tables is not None:  # paged decode: s == 1, pos is (B,)
         # write the new K/V row through the table (slot b's token lands in
         # physical block ``bt[b, pos//bs]`` at offset ``pos % bs``; retired
@@ -356,6 +387,28 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
                 v[:, 0].astype(cache["v"].dtype))
             out = paged_attention(q[:, 0], cache["k"], cache["v"],
                                   block_tables, pos, scale=scale)[:, None]
+    elif pos.ndim == 1:  # decode, per-row positions on a contiguous cache
+        # the speculative drafter's cache: contiguous (max_slots, max_len)
+        # rows, but slots sit at their own absolute positions (paged slots
+        # are not left-padded), so the write is a per-row scatter and each
+        # row masks against its own position — the same per-row semantics
+        # as paged decode, without the block indirection
+        if cfg.window or "k_scale" in cache:
+            raise NotImplementedError(
+                "per-row decode positions are not implemented for "
+                "sliding-window or quantized contiguous caches")
+        rows = jnp.arange(b)
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[rows, pos].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[rows, pos].set(
+            v[:, 0].astype(cache["v"].dtype))
+        kc, vc = _cache_read(cache)
+        si = jnp.arange(kc.shape[1])
+        valid = si[None, :] <= pos[:, None]               # (B, T)
+        mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+        out = _grouped_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                                 mask, scale)
     else:  # decode: s == 1, absolute position ``pos``
         cache = _cache_write(cache, k, v, pos, cfg.window)
         kc, vc = _cache_read(cache)

@@ -90,6 +90,12 @@ class LM:
             # start offset; rows live at absolute positions pos..pos+s-1
             pos = caches["pos"]
             positions = pos + jnp.arange(s)
+        elif mode == "verify":
+            # speculative multi-position verify: ``pos`` is the paged
+            # per-slot length vector; row (b, j) sits at absolute
+            # position pos[b] + j
+            pos = caches["pos"]
+            positions = pos[:, None] + jnp.arange(s)
         else:
             pos = jnp.zeros((), jnp.int32)
             positions = jnp.arange(s)
@@ -181,6 +187,21 @@ class LM:
         logits, caches, _ = self.forward(params, batch, mode="decode",
                                          caches=caches)
         return logits[:, -1], caches
+
+    def verify_step(self, params, tokens, caches
+                    ) -> Tuple[jnp.ndarray, dict]:
+        """tokens: (B, S) — S-token runs written and scored at per-slot
+        absolute positions ``pos[b] .. pos[b]+S-1`` on the paged cache.
+
+        Returns ALL S per-position logits ``(B, S, vocab)``: row ``j``
+        conditions on everything through position ``pos[b]+j``, so it is
+        exactly the logits a lockstep decode step would produce there —
+        the speculative verifier consumes every row (unlike prefill /
+        decode, which return only the last)."""
+        batch = {"tokens": tokens, "enc_out": caches.get("enc_out")}
+        logits, caches, _ = self.forward(params, batch, mode="verify",
+                                         caches=caches)
+        return logits, caches
 
     # ---------------------------------------------------------------- specs
     def input_specs(self, shape) -> Dict[str, Any]:

@@ -85,13 +85,14 @@ def apply_block(p, x, *, cfg, kind: str, use_moe: bool, rope, mode: str,
                 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
     """Returns (x, new_cache, moe_aux)."""
     aux = jnp.zeros((), jnp.float32)
-    if mode == "chunk" and kind != "a":
+    if mode in ("chunk", "verify") and kind != "a":
         # recurrent mixers fold the whole prefix into their state with
         # chunk-size-dependent scan groupings — continuing one from a
         # partial state cannot reproduce the monolithic prefill bit-for-bit,
-        # so the scheduler refuses chunked prefill for these stacks
+        # so the scheduler refuses chunked prefill (and the speculative
+        # multi-position verify) for these stacks
         raise NotImplementedError(
-            f"chunked prefill is not implemented for {kind!r} blocks")
+            f"{mode!r} mode is not implemented for {kind!r} blocks")
     if kind == "rwkv":
         h, st_tm = rwkv_lib.rwkv_timemix(
             p["tm"], rms_norm(p["ln1"], x, plus_one=cfg.norm_plus_one),
@@ -259,7 +260,7 @@ def apply_stack(stack, x, *, cfg, rope, mode: str, caches, pos,
                 new_c[f"b{i}"] = c_out
         return xin, (new_c if new_c else None), aux_sum
 
-    needs_cache = mode in ("prefill", "decode", "chunk")
+    needs_cache = mode in ("prefill", "decode", "chunk", "verify")
     if "periods" in stack:
         pcaches = caches["periods"] if needs_cache else None
 

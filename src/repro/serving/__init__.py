@@ -1,12 +1,20 @@
 """Batched serving engine (round or continuous-batching slot scheduler)
 with quantized-weight and quantized-KV paths, a first-class KV-cache API
-(contiguous or paged-with-prefix-reuse), backed by a versioned
-hot-reloadable weight store."""
-from repro.serving.engine import (ServeEngine, ServeConfig,  # noqa: F401
-                                  Request, Completion)
+(contiguous or paged-with-prefix-reuse), self-speculative decoding (the
+low-bit quantization drafts for the serving tree), backed by a versioned
+hot-reloadable weight store.
+
+The deliberate public surface lives in :mod:`repro.serving.api`
+(``Request``/``Completion``/``StagedInfo``/``SchedulerStats``) and is
+re-exported here; ``repro.serving.engine.Request`` and
+``repro.serving.scheduler.Request`` remain as deprecated aliases."""
+from repro.serving.api import (Request, Completion,  # noqa: F401
+                               StagedInfo, SchedulerStats)
+from repro.serving.engine import ServeEngine, ServeConfig  # noqa: F401
 from repro.serving.kvcache import (KVCache,  # noqa: F401
                                    ContiguousKVCache, PagedKVCache)
 from repro.serving.scheduler import (RoundScheduler,  # noqa: F401
                                      ContinuousScheduler)
+from repro.serving.speculative import SpeculativeDecoder  # noqa: F401
 from repro.serving.weights import (WeightStore,  # noqa: F401
                                    WeightVersion, make_weight_pipeline)

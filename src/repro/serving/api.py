@@ -1,0 +1,134 @@
+"""Public serving API: request/response types and typed stats.
+
+This is the deliberate public surface of :mod:`repro.serving` — promoted
+out of ``serving/scheduler.py`` when self-speculative decoding forced the
+serving loop to grow multi-token-per-step semantics. Import from here (or
+from ``repro.serving``); ``repro.serving.scheduler.Request`` and
+``repro.serving.engine.Request`` remain as deprecated aliases.
+
+Types
+-----
+* :class:`Request` — one generation request. ``request_id`` is
+  auto-assigned (process-unique) when left unset, and ``eos_id`` can
+  override the engine-global ``ServeConfig.eos_id`` per request.
+* :class:`Completion` — one finished request, with per-phase timings, the
+  pinned weight version, and the speculative-decoding counters
+  (``draft_tokens_proposed``/``draft_tokens_accepted`` are 0 when
+  speculation is off; ``steps`` counts the engine sampling steps the
+  request lived through — < ``len(tokens)`` when drafts were accepted).
+* :class:`StagedInfo` — the staged weight version a reload-aware
+  scheduler compares against its swap deadline.
+* :class:`SchedulerStats` — ``scheduler.stats()`` as a typed record
+  instead of an ad-hoc dict.
+
+``StagedInfo`` and ``SchedulerStats`` support ``info["key"]`` /
+``info.get("key")`` alongside attribute access so existing dict-style
+consumers keep working across the API move.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence
+
+__all__ = ["Request", "Completion", "StagedInfo", "SchedulerStats"]
+
+# process-unique auto ids for requests constructed without one; starts
+# high so explicit small ids (the common test/example pattern) never clash
+_AUTO_REQUEST_IDS = itertools.count(1 << 20)
+
+
+class _ItemAccess:
+    """Dict-style read access for dataclass stats records (migration
+    shim: the pre-api.py ``stats()``/``staged_info()`` returned dicts)."""
+
+    def __getitem__(self, key: str) -> Any:
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return getattr(self, key, default)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``request_id`` left at the default (None) is auto-assigned a
+    process-unique id, so callers that don't need to correlate
+    completions can omit it. ``eos_id`` overrides the engine-global
+    ``ServeConfig.eos_id`` for this request only (None: use the
+    engine's; -1: never stop early regardless of the engine's).
+    """
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    request_id: Optional[int] = None
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        if self.request_id is None:
+            self.request_id = next(_AUTO_REQUEST_IDS)
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: List[int]
+    prefill_ms: float
+    decode_ms: float
+    swap_ms: float = 0.0          # weight-swap time observed by this request
+    weights_version: int = 1      # WeightStore version pinned at admission
+    forced_swaps: int = 0         # deadline force-swaps that landed in flight
+    steps: int = 0                # engine sampling steps this request spanned
+    draft_tokens_proposed: int = 0   # speculative: drafts the w4 tree offered
+    draft_tokens_accepted: int = 0   # speculative: drafts the verifier kept
+
+
+@dataclasses.dataclass
+class StagedInfo(_ItemAccess):
+    """A fully-built weight version waiting to be swapped in; ``age_ms``
+    is how long it has been waiting (schedulers compare it against their
+    swap deadline)."""
+    version: int
+    age_ms: float
+
+
+@dataclasses.dataclass
+class SchedulerStats(_ItemAccess):
+    """Typed ``scheduler.stats()`` record (both schedulers).
+
+    Round fills only ``kind``/``steps``/``rounds``; the continuous
+    scheduler fills the pool/admission/drain counters, the step-time
+    tails, and — when speculative decoding is on — the acceptance
+    telemetry: ``acceptance_rate`` is accepted/proposed draft tokens and
+    ``accepted_len`` holds p50/p95 of per-slot tokens committed per
+    verify cycle (1.0 == verifier-only pace).
+    """
+    kind: str
+    steps: int = 0
+    rounds: int = 0
+    max_slots: int = 0
+    admitted: int = 0
+    retired: int = 0
+    waves: int = 0
+    drains: int = 0
+    forced_swaps: int = 0
+    mean_occupancy: float = 0.0
+    max_occupancy: int = 0
+    prefill_chunk: int = 0
+    chunk_steps: int = 0
+    pendings_started: int = 0
+    pendings_abandoned: int = 0
+    step_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    kv: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    speculative: bool = False
+    spec_cycles: int = 0
+    draft_tokens_proposed: int = 0
+    draft_tokens_accepted: int = 0
+    acceptance_rate: float = 0.0
+    accepted_len: Dict[str, float] = dataclasses.field(default_factory=dict)

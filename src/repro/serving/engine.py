@@ -38,16 +38,111 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 
+from repro.serving.api import Completion, Request
 from repro.serving.kvcache import admit_rows
-from repro.serving.scheduler import (Completion, ContinuousScheduler,
-                                     Request, RoundScheduler)
-from repro.serving.weights import WeightStore, make_weight_pipeline
+from repro.serving.scheduler import ContinuousScheduler, RoundScheduler
+from repro.serving.weights import (WeightStore, make_draft_quantize_fn,
+                                   make_weight_pipeline)
 
-__all__ = ["ServeConfig", "Request", "Completion", "ServeEngine"]
+__all__ = ["ServeConfig", "Request", "Completion", "ServeEngine",
+           "CONFIG_GATES", "ConfigGate"]
+
+
+# ---------------------------------------------------------------------------
+# declarative config validation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConfigGate:
+    """One row of the ServeConfig validity matrix: ``invalid(cfg)`` true
+    means the config is rejected with ``error(message)``. Feature-pair
+    gates use the uniform ``"unsupported combination: ..."`` prefix;
+    plain range/enum rows keep their direct messages. The table replaces
+    the accreted ``__post_init__`` if-chain so a new feature lands as a
+    row (and one parametrized test enumerates every row), not a branch."""
+    name: str
+    invalid: Callable[["ServeConfig"], bool]
+    error: type
+    message: Union[str, Callable[["ServeConfig"], str]]
+
+    def check(self, cfg: "ServeConfig") -> None:
+        if self.invalid(cfg):
+            msg = self.message(cfg) if callable(self.message) \
+                else self.message
+            raise self.error(msg)
+
+
+CONFIG_GATES: Tuple[ConfigGate, ...] = (
+    # ---- range / enum rows -------------------------------------------------
+    ConfigGate(
+        "prefill_chunk_range",
+        lambda c: c.prefill_chunk < 0, ValueError,
+        "prefill_chunk must be >= 0"),
+    ConfigGate(
+        "kv_backend_enum",
+        lambda c: c.kv_backend not in ("contiguous", "paged"), ValueError,
+        lambda c: f"unknown kv_backend {c.kv_backend!r} "
+                  "(expected 'contiguous' or 'paged')"),
+    ConfigGate(
+        "block_size_range",
+        lambda c: c.kv_backend == "paged" and c.block_size < 1, ValueError,
+        "block_size must be >= 1"),
+    ConfigGate(
+        "block_size_divides",
+        lambda c: c.kv_backend == "paged" and c.block_size >= 1
+        and c.max_len % c.block_size != 0, ValueError,
+        lambda c: f"block_size ({c.block_size}) must divide max_len "
+                  f"({c.max_len}): the per-slot block table must span "
+                  "exactly max_len positions for bit-compatibility with "
+                  "the contiguous backend"),
+    ConfigGate(
+        "kv_blocks_range",
+        lambda c: c.kv_backend == "paged" and c.kv_blocks < 0, ValueError,
+        "kv_blocks must be >= 0"),
+    ConfigGate(
+        "draft_k_range",
+        lambda c: c.speculative and c.draft_k < 1, ValueError,
+        "draft_k must be >= 1"),
+    ConfigGate(
+        "draft_bits_range",
+        lambda c: c.speculative and not 2 <= c.draft_bits <= 8, ValueError,
+        lambda c: f"draft_bits ({c.draft_bits}) must be in [2, 8]"),
+    # ---- feature-pair rows (uniform "unsupported combination:" prefix) -----
+    ConfigGate(
+        "paged_x_round",
+        lambda c: c.kv_backend == "paged" and c.scheduler != "continuous",
+        NotImplementedError,
+        "unsupported combination: kv_backend='paged' requires "
+        "scheduler='continuous' (the round scheduler's per-round caches "
+        "are contiguous by construction)"),
+    ConfigGate(
+        "speculative_x_contiguous",
+        lambda c: c.speculative and c.kv_backend != "paged",
+        NotImplementedError,
+        "unsupported combination: speculative decoding requires "
+        "kv_backend='paged' (the verifier rewinds per-slot positions on "
+        "draft rejection; the contiguous/lockstep cache has one shared "
+        "clock and cannot rewind a single slot)"),
+    ConfigGate(
+        "speculative_x_quant_kv",
+        lambda c: c.speculative and c.quantize_kv,
+        NotImplementedError,
+        "unsupported combination: speculative x quantize_kv (greedy "
+        "acceptance promises tokens bit-identical to verifier-only "
+        "decode, which needs the fp KV pool; int8 KV is tolerance-"
+        "equivalent only)"),
+    ConfigGate(
+        "speculative_x_sampling",
+        lambda c: c.speculative and (c.temperature > 0 or c.top_k > 0),
+        NotImplementedError,
+        "unsupported combination: speculative x sampling "
+        "(temperature/top_k): greedy acceptance compares argmax tokens; "
+        "set temperature=0 and top_k=0"),
+)
 
 
 @dataclasses.dataclass
@@ -93,36 +188,27 @@ class ServeConfig:
     # block (0: full capacity, max_slots * (max_len // block_size) + 1 —
     # no admission backpressure; smaller pools admit under a block budget)
     kv_blocks: int = 0
+    # self-speculative decoding (paged + continuous + greedy only): a
+    # draft_bits quantization of the SAME checkpoint autoregressively
+    # proposes draft_k-token runs per slot, the serving tree verifies all
+    # positions in one batched multi-position forward, and the longest
+    # matching prefix is accepted — output tokens stay bit-identical to
+    # verifier-only decode (greedy acceptance), only the steps-per-token
+    # changes. quantize_kv composes with prefill_chunk AND paged (the
+    # former gates are gone; tokens are tolerance-equivalent under int8
+    # KV), but NOT with speculative — see CONFIG_GATES.
+    speculative: bool = False
+    # speculative only: bit-width of the drafter quantized from the same
+    # fp tree (the SQuant ladder: sub-second, data-free — drafts for free)
+    draft_bits: int = 4
+    # speculative only: draft tokens proposed per cycle; the verifier
+    # scores all draft_k + 1 positions (carry token + proposals) in one
+    # batched multi-position forward
+    draft_k: int = 4
 
     def __post_init__(self):
-        if self.prefill_chunk < 0:
-            raise ValueError("prefill_chunk must be >= 0")
-        # quantize_kv composes with prefill_chunk AND kv_backend='paged':
-        # chunk continuations attend to dequantized prefix keys and the
-        # paged pool stores int8 codes + per-position scale blocks, so
-        # greedy tokens are tolerance-equivalent to the fp oracle (the
-        # per-config agreement budget in repro.serving.equivalence, >= 0.98
-        # asserted in tests and the bench gate) rather than bit-identical —
-        # the former NotImplementedError gates here are gone.
-        if self.kv_backend not in ("contiguous", "paged"):
-            raise ValueError(f"unknown kv_backend {self.kv_backend!r} "
-                             "(expected 'contiguous' or 'paged')")
-        if self.kv_backend == "paged":
-            if self.scheduler != "continuous":
-                raise NotImplementedError(
-                    "the paged KV cache requires scheduler='continuous' "
-                    "(the round scheduler's per-round caches are "
-                    "contiguous by construction)")
-            if self.block_size < 1:
-                raise ValueError("block_size must be >= 1")
-            if self.max_len % self.block_size:
-                raise ValueError(
-                    f"block_size ({self.block_size}) must divide max_len "
-                    f"({self.max_len}): the per-slot block table must span "
-                    "exactly max_len positions for bit-compatibility with "
-                    "the contiguous backend")
-            if self.kv_blocks < 0:
-                raise ValueError("kv_blocks must be >= 0")
+        for gate in CONFIG_GATES:
+            gate.check(self)
 
 
 class ServeEngine:
@@ -137,8 +223,14 @@ class ServeEngine:
         if store is None:
             if params is None:
                 raise ValueError("ServeEngine needs params or a store")
+            # speculative serving stages a versioned (target, draft) pair:
+            # both trees quantized from the one fp source, swapped
+            # atomically so a reload can never mix generations
+            draft_fn = make_draft_quantize_fn(model, self.cfg) \
+                if self.cfg.speculative else None
             store = WeightStore(quantize_fn, fp_params=params,
-                                prepare_fn=prepare_fn)
+                                prepare_fn=prepare_fn,
+                                draft_quantize_fn=draft_fn)
         self.store = store
         # jit entry points with trace accounting: each counter increments
         # only when jax traces a new shape specialization, so tests can

@@ -235,6 +235,14 @@ class KVCache:
     def on_weight_swap(self) -> None:
         """Invalidate weight-version-dependent cached state."""
 
+    def rewind(self, slot_id: int, n: int) -> None:
+        """Roll slot ``slot_id`` back by ``n`` positions (speculative
+        decoding rejects drafted tokens). Contiguous caches share one
+        clock across slots and cannot rewind one slot — the config gate
+        keeps speculation off this backend."""
+        raise NotImplementedError(
+            f"rewind is not supported by the {self.backend!r} KV backend")
+
     def stats(self) -> Dict[str, Any]:
         return {"backend": self.backend}
 
@@ -439,6 +447,31 @@ class PagedKVCache(KVCache):
         self._gather = engine._jit_counted("gather", gather_blocks)
         self._scatter = engine._jit_counted("scatter", scatter_blocks)
         self._copy = engine._jit_counted("copy", copy_block)
+        # multi-position verifier forward (speculative decoding only —
+        # the counter is lazy so non-speculative paged runs keep their
+        # exact trace_counts dict)
+        if getattr(cfg, "speculative", False):
+            for name in ("verify", "spec_carry"):
+                engine.trace_counts.setdefault(name, 0)
+            model = self.model
+
+            # the whole cycle tail is fused into the verify dispatch:
+            # concat [t0, drafts], the S-position forward, and the
+            # verifier's own argmax verdict — one device call and ONE
+            # host sync (drafts+verdict together) per cycle, which is
+            # where speculation's smoke-scale throughput win lives
+            def verify_fused(params, t0, drafts, cache):
+                x = jnp.concatenate([t0[:, None], drafts], axis=1)
+                lg, cache = model.verify_step(params, x, cache)
+                verdict = jnp.argmax(lg[:, :-1], axis=-1).astype(jnp.int32)
+                return lg, verdict, cache
+
+            def install_rows(logits, lg, slots, rows):
+                return logits.at[slots].set(
+                    lg[slots, rows].astype(logits.dtype))
+
+            self._verify = engine._jit_counted("verify", verify_fused)
+            self._install = engine._jit_counted("spec_carry", install_rows)
 
     # ---------------------------------------------------------------- clock
     @property
@@ -768,27 +801,31 @@ class PagedKVCache(KVCache):
                     f"slot {s} table points at unreferenced block {ph}"
 
     # -------------------------------------------------------------- decode
+    def _writable_block(self, i: int, j: int) -> None:
+        """Make table entry ``(i, j)`` privately writable: allocate a
+        reserved block at a TRASH boundary (drawing down the slot's
+        reservation), or copy-on-write a block with other sharers
+        (defensive at decode time: admission already privatizes every
+        block it writes, so a shared tail here means a new sharing mode —
+        keep the invariant regardless)."""
+        ph = int(self._tables[i, j])
+        if ph == TRASH:
+            self._tables[i, j] = self._alloc()
+            self._slot_reserved[i] -= 1
+            self._reserved -= 1
+        elif self._ref[ph] > 1:
+            nb = self._alloc()
+            self._cache = self._copy(self._cache,
+                                     jnp.asarray(np.int32(ph)),
+                                     jnp.asarray(np.int32(nb)))
+            self._unref(ph)
+            self._tables[i, j] = nb
+            self.cow_copies += 1
+
     def decode(self, params, nxt, active_ids) -> None:
         bs = self.block_size
         for i in active_ids:
-            pos = int(self._lengths[i])
-            j = pos // bs
-            ph = int(self._tables[i, j])
-            if ph == TRASH:
-                self._tables[i, j] = self._alloc()
-                self._slot_reserved[i] -= 1
-                self._reserved -= 1
-            elif self._ref[ph] > 1:
-                # decode-time COW (defensive: admission already privatizes
-                # every block it writes, so a shared tail here means a new
-                # sharing mode — keep the invariant regardless)
-                nb = self._alloc()
-                self._cache = self._copy(self._cache,
-                                         jnp.asarray(np.int32(ph)),
-                                         jnp.asarray(np.int32(nb)))
-                self._unref(ph)
-                self._tables[i, j] = nb
-                self.cow_copies += 1
+            self._writable_block(i, int(self._lengths[i]) // bs)
         # snapshots, not views: the device arrays may alias host memory
         # (zero-copy transfer) and ``_lengths``/``_tables`` are mutated
         # right after dispatch — aliasing would race the async decode
@@ -797,6 +834,75 @@ class PagedKVCache(KVCache):
         self._logits, self._cache = self.eng._decode(
             params, nxt[:, None], self._cache)
         self._lengths[active_ids] += 1
+
+    # ------------------------------------------------- speculative verify
+    def ensure_rows(self, slot: int, start: int, n: int) -> None:
+        """Make positions ``start .. start+n-1`` of ``slot`` writable
+        before a multi-position verify: allocate reserved blocks at TRASH
+        boundaries exactly as decode does, and privatize (COW) any block
+        with other sharers in the write range."""
+        bs = self.block_size
+        for j in range(start // bs, -(-(start + n) // bs)):
+            self._writable_block(slot, j)
+
+    def verify(self, params, t0, drafts, active_ids):
+        """One batched multi-position verifier forward over ``[t0,
+        drafts]``: slot ``b`` writes K/V for — and scores — absolute
+        positions ``lengths[b] .. lengths[b]+S-1``, where ``S = 1 +
+        drafts.shape[1]`` and row ``j`` of the returned ``(max_slots, S,
+        vocab)`` logits conditions on everything through position
+        ``lengths[b]+j``. Also returns the fused per-row argmax
+        ``verdict`` (``(max_slots, S-1)``): ``verdict[b, j]`` is the
+        token verifier-only decode would emit after ``[t0, d_1..d_j]``.
+        Active slots' lengths advance by S (the speculative cycle
+        rewinds the rejected suffix); inactive slots' tables are
+        all-TRASH so their writes land in the trash block, exactly as in
+        lockstep decode."""
+        s = int(drafts.shape[1]) + 1
+        for i in active_ids:
+            self.ensure_rows(i, int(self._lengths[i]), s)
+        self._cache["pos"] = jnp.asarray(self._lengths.copy())
+        self._cache["block_tables"] = jnp.asarray(self._tables.copy())
+        lg, verdict, self._cache = self._verify(params, t0, drafts,
+                                                self._cache)
+        self._lengths[np.asarray(active_ids, np.int64)] += s
+        return lg, verdict
+
+    def carry_logits(self, lg, slot_ids, rows) -> None:
+        """Install ``lg[slot, rows[slot]]`` as each listed slot's pending
+        logits — the verifier row at the divergence point, carried into
+        the scheduler's next sample — in one fused gather+scatter."""
+        self._logits = self._install(
+            self._logits, lg,
+            jnp.asarray(np.asarray(slot_ids, np.int32)),
+            jnp.asarray(np.asarray(rows, np.int32)))
+
+    def rewind(self, slot_id: int, n: int) -> None:
+        """Roll ``slot_id`` back ``n`` positions (reject drafted tokens).
+
+        A block that no longer holds any live position returns to the
+        slot's *reservation* (``_slot_reserved``), never to another
+        slot's budget: the slot drew down its reservation when it
+        allocated the block and needs the claim back to finish its
+        ``max_new_tokens``. The physical block itself goes through
+        ``_unref`` — an exclusively-owned unregistered block lands on the
+        free list (where the restored reservation keeps it claimable),
+        a registered one parks in the cached set, and a block other slots
+        still share just drops this slot's ref — so the free/cached/
+        active partition and the ``free + cached - reserved`` admission
+        budget both stay consistent."""
+        if n <= 0:
+            return
+        new_len = int(self._lengths[slot_id]) - n
+        assert new_len >= 0, "rewind past the start of the slot"
+        for j in range(-(-new_len // self.block_size), self.nb_per_slot):
+            ph = int(self._tables[slot_id, j])
+            if ph != TRASH:
+                self._unref(ph)
+                self._tables[slot_id, j] = TRASH
+                self._slot_reserved[slot_id] += 1
+                self._reserved += 1
+        self._lengths[slot_id] = new_len
 
     def retire(self, slot_id: int) -> None:
         """Drop the slot's refs; exclusively-owned unregistered blocks go

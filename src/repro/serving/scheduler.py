@@ -90,32 +90,24 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Request/Completion moved to repro.serving.api (the deliberate public
+# surface); these re-imports keep `scheduler.Request` working as a
+# deprecated alias for existing callers
+from repro.serving.api import Completion, Request, SchedulerStats
 from repro.serving.kvcache import KVCache, admit_rows  # noqa: F401
 from repro.serving.sampling import sample
+from repro.serving.speculative import SpeculativeDecoder
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: Sequence[int]
-    max_new_tokens: int = 16
-    request_id: int = 0
-
-
-@dataclasses.dataclass
-class Completion:
-    request_id: int
-    tokens: List[int]
-    prefill_ms: float
-    decode_ms: float
-    swap_ms: float = 0.0          # weight-swap time observed by this request
-    weights_version: int = 1      # WeightStore version pinned at admission
-    forced_swaps: int = 0         # deadline force-swaps that landed in flight
+def _req_eos(req: Request, cfg) -> int:
+    """Per-request EOS override (None: the engine-global eos_id)."""
+    return cfg.eos_id if req.eos_id is None else req.eos_id
 
 
 @dataclasses.dataclass
@@ -129,6 +121,9 @@ class _Slot:
     swap_ms: float = 0.0
     forced_swaps: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
+    steps: int = 0                # engine sampling steps this slot spanned
+    proposed: int = 0             # speculative: draft tokens offered
+    accepted: int = 0             # speculative: draft tokens kept
 
 
 @dataclasses.dataclass
@@ -243,9 +238,9 @@ class RoundScheduler(_SchedulerBase):
             reqs = reqs[self.cfg.max_batch:]
         return out
 
-    def stats(self) -> Dict[str, Any]:
-        return {"kind": self.name, "steps": self.steps_total,
-                "rounds": self.eng._rounds_total}
+    def stats(self) -> SchedulerStats:
+        return SchedulerStats(kind=self.name, steps=self.steps_total,
+                              rounds=self.eng._rounds_total)
 
     def _run_round(self, reqs: List[Request]) -> List[Completion]:
         cfg = self.cfg
@@ -289,7 +284,7 @@ class RoundScheduler(_SchedulerBase):
                 if not done[i] and t < r.max_new_tokens:
                     produced[i, t] = nxt_np[i]
                     recorded += 1
-                    if nxt_np[i] == cfg.eos_id:
+                    if nxt_np[i] == _req_eos(r, cfg):
                         done[i] = True
                 else:
                     done[i] = done[i] or t >= r.max_new_tokens
@@ -316,10 +311,12 @@ class RoundScheduler(_SchedulerBase):
         for i, r in enumerate(reqs):
             toks = [int(x) for x in produced[i, :r.max_new_tokens]]
             # truncate at EOS
-            if cfg.eos_id >= 0 and cfg.eos_id in toks:
-                toks = toks[:toks.index(cfg.eos_id) + 1]
+            eid = _req_eos(r, cfg)
+            if eid >= 0 and eid in toks:
+                toks = toks[:toks.index(eid) + 1]
             outs.append(Completion(r.request_id, toks, prefill_ms,
-                                   decode_ms, swap_ms, ver.version))
+                                   decode_ms, swap_ms, ver.version,
+                                   steps=len(toks)))
         return outs
 
 
@@ -360,6 +357,14 @@ class ContinuousScheduler(_SchedulerBase):
                 "assume per-position cache rows; use kv_backend='contiguous'")
         self.max_slots = self.kv.max_slots
         self.slots: List[Optional[_Slot]] = [None] * self.max_slots
+        # self-speculative decoding: the draft-side state + device plumbing
+        # (config feasibility — paged-only, greedy-only, no quantize_kv —
+        # is validated by the CONFIG_GATES table)
+        self.spec: Optional[SpeculativeDecoder] = None
+        if self.cfg.speculative:
+            self.spec = SpeculativeDecoder(engine, self.kv)
+            self.spec.bind(self)
+        self._ver = None              # the currently-acquired WeightVersion
         self._pending_swap_ms = 0.0   # swap time to attribute at admission
         self._kv_version = None       # weight version the KV prefix cache
         #                               was built under (flush on change)
@@ -399,6 +404,7 @@ class ContinuousScheduler(_SchedulerBase):
         queue: "collections.deque[Tuple[int, Request]]" = collections.deque()
         ver, swap_ms = self.store.acquire()
         params = ver.params
+        self._ver = ver
         # a version staged between generate() calls swaps at this acquire,
         # bypassing the drain branch — the KV cache must still learn of it
         self._sync_kv_version(ver.version)
@@ -438,12 +444,13 @@ class ContinuousScheduler(_SchedulerBase):
                 # chunks ran on the old weights) and re-queues its requests
                 busy = bool(active_ids) or self._pending is not None
                 if not busy or (deadline is not None
-                                and staged["age_ms"] >= deadline):
+                                and staged.age_ms >= deadline):
                     if self._pending is not None:
                         self._abandon_pending(queue)
                     forced = busy
                     ver, sms = self.store.acquire()
                     params = ver.params
+                    self._ver = ver
                     self._sync_kv_version(ver.version)
                     self.store.note_swap(forced=forced, drain_ms=elapsed_ms)
                     self._pending_swap_ms += sms
@@ -533,16 +540,12 @@ class ContinuousScheduler(_SchedulerBase):
                 s = self.slots[i]
                 tok = int(nxt_np[i])
                 s.tokens.append(tok)
+                s.steps += 1
                 recorded += 1
+                eid = _req_eos(s.req, cfg)
                 if (len(s.tokens) >= s.req.max_new_tokens
-                        or (cfg.eos_id >= 0 and tok == cfg.eos_id)):
-                    results[s.order] = Completion(
-                        s.req.request_id, s.tokens, s.prefill_ms,
-                        (t_now - s.t0) * 1e3, s.swap_ms, s.version,
-                        s.forced_swaps)
-                    self.slots[i] = None
-                    self.kv.retire(i)
-                    self.retired += 1
+                        or (eid >= 0 and tok == eid)):
+                    self._finish(results, i, t_now)
             self.steps_total += 1
             self.occupancy_sum += recorded
             self.max_occupancy = max(self.max_occupancy, recorded)
@@ -554,26 +557,95 @@ class ContinuousScheduler(_SchedulerBase):
                              "admit_ms": admit_ms})
             alive = [i for i, s in enumerate(self.slots) if s is not None]
             if alive:
-                self.kv.decode(params, nxt, alive)
+                if self.spec is not None:
+                    # speculative cycle: the carry token's K/V row is
+                    # written by the verify forward together with the
+                    # draft run (there is no separate decode step)
+                    self._spec_cycle(results, params, nxt, alive)
+                else:
+                    self.kv.decode(params, nxt, alive)
         return results  # type: ignore[return-value]
 
-    def stats(self) -> Dict[str, Any]:
+    def _finish(self, results, slot: int, t_now: float) -> None:
+        """Retire slot ``slot`` and record its Completion."""
+        s = self.slots[slot]
+        results[s.order] = Completion(
+            s.req.request_id, s.tokens, s.prefill_ms,
+            (t_now - s.t0) * 1e3, s.swap_ms, s.version, s.forced_swaps,
+            steps=s.steps, draft_tokens_proposed=s.proposed,
+            draft_tokens_accepted=s.accepted)
+        self.slots[slot] = None
+        self.kv.retire(slot)
+        if self.spec is not None:
+            self.spec.retire_slot(slot)
+        self.retired += 1
+
+    def _spec_cycle(self, results, params, t0, alive: List[int]) -> None:
+        """One self-speculative cycle for the ``alive`` slots (their carry
+        tokens ``t0`` are already recorded): draft ``k_eff`` proposals,
+        verify all ``k_eff + 1`` positions in one forward, emit the
+        longest verifier-matching prefix per slot, rewind the rejected
+        suffix, and install the divergence-row logits as the slot's
+        pending logits — so the next sampled token is exactly what
+        verifier-only decode would have produced."""
+        cfg = self.cfg
+        k_eff, accept, drafts, lg = self.spec.run_cycle(
+            params, self._ver.draft_params, t0, alive)
+        survivors: List[int] = []
+        acc_rows: List[int] = []
+        t_now = time.perf_counter()
+        for i in alive:
+            s = self.slots[i]
+            a = int(accept[i])
+            eid = _req_eos(s.req, cfg)
+            emitted = 0
+            retired = False
+            for j in range(a):
+                tok = int(drafts[i, j])
+                s.tokens.append(tok)
+                emitted += 1
+                if (len(s.tokens) >= s.req.max_new_tokens
+                        or (eid >= 0 and tok == eid)):
+                    retired = True
+                    break
+            s.proposed += k_eff
+            s.accepted += emitted
+            self.spec.accepted += emitted
+            self.spec.accepted_len_log.append(1 + emitted)
+            if retired:
+                self._finish(results, i, t_now)
+            else:
+                # verify advanced the slot by k_eff + 1; keep the carry
+                # token + the accepted drafts, return the rest to the
+                # slot's block reservation
+                self.kv.rewind(i, k_eff - a)
+                self.spec.sync_slot(i)
+                survivors.append(i)
+                acc_rows.append(a)
+        if survivors:
+            self.kv.carry_logits(lg, survivors, acc_rows)
+
+    def stats(self) -> SchedulerStats:
         ms = np.asarray(self.step_ms_log, np.float64)
         tail = {f"p{q}": float(np.percentile(ms, q)) for q in (50, 95, 99)} \
             if ms.size else {}
-        return {"kind": self.name, "max_slots": self.max_slots,
-                "steps": self.steps_total, "admitted": self.admitted,
-                "retired": self.retired, "waves": self.waves,
-                "drains": self.drains, "forced_swaps": self.forced_swaps,
-                "mean_occupancy": (self.occupancy_sum / self.steps_total
-                                   if self.steps_total else 0.0),
-                "max_occupancy": self.max_occupancy,
-                "prefill_chunk": self.chunk,
-                "chunk_steps": self.chunk_steps,
-                "pendings_started": self.pendings_started,
-                "pendings_abandoned": self.pendings_abandoned,
-                "step_ms": tail,
-                "kv": self.kv.stats()}
+        spec = self.spec.stats() if self.spec is not None else {}
+        return SchedulerStats(
+            kind=self.name, max_slots=self.max_slots,
+            steps=self.steps_total, admitted=self.admitted,
+            retired=self.retired, waves=self.waves,
+            drains=self.drains, forced_swaps=self.forced_swaps,
+            mean_occupancy=(self.occupancy_sum / self.steps_total
+                            if self.steps_total else 0.0),
+            max_occupancy=self.max_occupancy,
+            prefill_chunk=self.chunk,
+            chunk_steps=self.chunk_steps,
+            pendings_started=self.pendings_started,
+            pendings_abandoned=self.pendings_abandoned,
+            step_ms=tail,
+            kv=self.kv.stats(),
+            speculative=self.spec is not None,
+            **spec)
 
     # ------------------------------------------- chunked admission pipeline
     def _start_pending(self, queue, free_ids, fresh: bool,
@@ -705,6 +777,13 @@ class ContinuousScheduler(_SchedulerBase):
                 order=order, req=r, version=p.version,
                 clock0=len(r.prompt), t0=time.perf_counter(),
                 prefill_ms=p.entry_ms, swap_ms=self._pending_swap_ms)
+            if self.spec is not None:
+                # the drafter needs its own prompt K/V before the slot's
+                # first speculative cycle (one unpadded batch-1 prefill on
+                # the draft tree — speculative composes with chunked
+                # admission; only the verifier side is chunked)
+                self.spec.admit_slot(slot, r.prompt,
+                                     self._ver.draft_params)
             self.admission_log.append(
                 {"request_id": r.request_id, "slot": slot,
                  "clock": len(r.prompt), "version": p.version,
@@ -790,6 +869,9 @@ class ContinuousScheduler(_SchedulerBase):
                 order=order, req=r, version=version, clock0=c0,
                 t0=t_now, prefill_ms=prefill_ms,
                 swap_ms=self._pending_swap_ms)
+            if self.spec is not None:
+                self.spec.admit_slot(slot_ids[j], r.prompt,
+                                     self._ver.draft_params)
             self.admission_log.append(
                 {"request_id": r.request_id, "slot": slot_ids[j],
                  "clock": c0, "version": version})

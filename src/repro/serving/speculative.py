@@ -1,0 +1,232 @@
+"""Self-speculative decoding: the w4 quantization drafts for the w8 verifier.
+
+SQuant's on-the-fly, data-free quantization produces *multiple* bit-widths
+of one checkpoint essentially for free (sub-second, no data, no BP), which
+turns the quantization ladder into a speculative-decoding ladder: the
+serving tree (e.g. w8) is the verifier, and a lower-bit tree
+(``ServeConfig.draft_bits``, default w4) of the SAME checkpoint is the
+drafter. Both trees are staged and swapped atomically as one
+:class:`~repro.serving.weights.WeightVersion` pair.
+
+Per continuous-scheduler step (paged backend only — per-slot positions and
+:meth:`PagedKVCache.rewind` are required):
+
+1. the scheduler samples the carry token ``t0`` from the verifier's
+   pending logits, exactly as in verifier-only decode;
+2. the draft tree autoregressively proposes ``k_eff <= draft_k`` tokens
+   ``d_1..d_k`` on its own contiguous draft cache (device-side argmax
+   chaining — no host sync per draft token);
+3. the verifier scores all ``k_eff + 1`` positions ``[t0, d_1..d_k]`` in
+   ONE batched multi-position forward (``LM.verify_step`` on the paged
+   pool — row ``j`` reproduces bit-exactly the logits a lockstep decode
+   step at that position would emit);
+4. the longest prefix of drafts matching the verifier's own argmax is
+   accepted; the rejected suffix is rolled back (``kv.rewind``) and the
+   verifier row at the divergence point becomes the next pending logits —
+   so the next ``t0`` is exactly the token verifier-only decode would
+   have produced there.
+
+Greedy acceptance therefore makes the emitted token stream **bit-identical
+to verifier-only decode**: every emitted token is either verified-argmax-
+equal to a draft, or the verifier's own argmax. Speculation changes only
+the steps-per-token (and the host-sync count per token), never the tokens.
+
+The draft cache is a plain contiguous ``(max_slots, max_len)`` cache with
+*per-slot* positions (paged slots are not left-padded or lockstepped), fed
+through the vector-position decode path in :mod:`repro.models.attention`.
+Draft rewind is position-only: stale draft rows past the accepted length
+are masked by position and overwritten by later proposals.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SpeculativeDecoder"]
+
+
+class SpeculativeDecoder:
+    """Draft-side state and the draft/verify device plumbing for one
+    continuous-scheduler run. The scheduler keeps slot bookkeeping
+    (emission, EOS/budget retirement, Completion assembly); this object
+    owns the draft cache, the chain/verify calls, and the acceptance
+    arithmetic."""
+
+    def __init__(self, engine, kv):
+        self.eng = engine
+        self.cfg = engine.cfg
+        self.model = engine.model
+        self.kv = kv                      # the PagedKVCache (verifier side)
+        self.max_slots = kv.max_slots
+        self.draft_k = int(self.cfg.draft_k)
+        # host-authoritative draft positions, pushed per chain call
+        self.draft_lengths = np.zeros((self.max_slots,), np.int32)
+        self._draft_cache = None          # contiguous (max_slots, max_len)
+        self._chain_fns: Dict[int, Any] = {}   # k_eff -> jitted chain
+        # lazy trace counters: non-speculative runs keep their exact
+        # trace_counts dict (tests assert equality on the baseline keys)
+        for name in ("draft_prefill", "draft_chain", "draft_admit"):
+            engine.trace_counts.setdefault(name, 0)
+        self._draft_prefill = engine._jit_counted("draft_prefill",
+                                                  self.model.prefill)
+        self._draft_admit = engine._jit_counted("draft_admit",
+                                                _admit_draft_rows)
+        # observability (surfaced through SchedulerStats)
+        self.cycles = 0
+        self.proposed = 0
+        self.accepted = 0
+        self.accepted_len_log: collections.deque = \
+            collections.deque(maxlen=4096)
+
+    # ------------------------------------------------------------ admission
+    def _ensure_cache(self) -> None:
+        if self._draft_cache is None:
+            # fp cache regardless of quantize_kv (speculative is gated off
+            # quantize_kv anyway; the drafter only needs self-consistency)
+            self._draft_cache = self.model.init_cache(
+                self.max_slots, self.cfg.max_len, quantize_kv=False)
+
+    def admit_slot(self, slot: int, prompt, draft_params) -> None:
+        """Prefill the slot's prompt on the draft tree (batch 1, unpadded
+        — the same shapes as the paged admission prefill) and scatter the
+        rows into the slot's row of the draft cache. The prefill's logits
+        are discarded: the chain always starts from the verifier-sampled
+        carry token, never from a draft-tree sample."""
+        self._ensure_cache()
+        side = self.model.init_cache(1, self.cfg.max_len, quantize_kv=False)
+        side["pos"] = jnp.zeros((), jnp.int32)
+        toks = jnp.asarray(np.asarray([int(t) for t in prompt], np.int32))
+        _, side = self._draft_prefill(draft_params, {"tokens": toks[None]},
+                                      side)
+        self._draft_cache = self._draft_admit(
+            self._draft_cache, side, jnp.asarray(np.int32(slot)))
+        self.draft_lengths[slot] = len(prompt)
+
+    def retire_slot(self, slot: int) -> None:
+        """Stale draft rows are masked by position; only the position
+        needs resetting (a later admission re-prefills the row)."""
+        self.draft_lengths[slot] = 0
+
+    # ---------------------------------------------------------------- chain
+    def _chain_fn(self, steps: int):
+        """A jitted draft chain for ``steps`` proposals: ``steps + 1``
+        decode feeds — the extra feed writes the LAST proposal's K/V row
+        (its logits are discarded), so a fully-accepted run leaves no gap
+        in the draft cache for the next cycle to trip over."""
+        fn = self._chain_fns.get(steps)
+        if fn is not None:
+            return fn
+        model = self.model
+
+        def chain(params, cache, t0):
+            tok = t0                          # (B,) int32
+            drafts = []
+            for _ in range(steps):
+                lg, cache = model.decode_step(params, tok[:, None], cache)
+                tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                drafts.append(tok)
+            _, cache = model.decode_step(params, tok[:, None], cache)
+            return jnp.stack(drafts, axis=1), cache
+
+        fn = self.eng._jit_counted("draft_chain", chain)
+        self._chain_fns[steps] = fn
+        return fn
+
+    def propose(self, draft_params, t0, k_eff: int):
+        """Run the draft chain: returns the ``(max_slots, k_eff)`` int32
+        proposals. Rows of slots outside the speculating set produce
+        garbage drafts into their own (position-masked) cache rows and
+        are simply ignored by the caller."""
+        self._ensure_cache()
+        self._draft_cache["pos"] = jnp.asarray(self.draft_lengths.copy())
+        drafts, self._draft_cache = self._chain_fn(k_eff)(
+            draft_params, self._draft_cache, t0)
+        return drafts
+
+    # ---------------------------------------------------------------- cycle
+    def run_cycle(self, params, draft_params, t0, alive: List[int]):
+        """One draft→verify cycle for the ``alive`` slots.
+
+        ``t0``: the ``(max_slots,)`` carry tokens the scheduler just
+        sampled (and recorded). Returns ``(k_eff, accept, drafts_np,
+        verify_logits)`` where ``accept[i]`` is the per-slot count of
+        verifier-matching draft tokens (0..k_eff), ``drafts_np`` is the
+        ``(max_slots, k_eff)`` proposal matrix, and ``verify_logits`` is
+        the device ``(max_slots, k_eff+1, vocab)`` verifier output —
+        row ``accept[i]`` of slot ``i`` is the pending-logits carry for
+        the next scheduler step.
+
+        The verifier's lengths advance by ``k_eff + 1`` inside
+        ``kv.verify``; the CALLER rewinds survivors by ``k_eff -
+        accept[i]`` (and retires finished slots), keeping all slot
+        lifecycle in the scheduler."""
+        # uniform chain depth, clamped so no slot's verify writes can run
+        # past its reserved blocks (budget >= 1 for every alive slot)
+        k_eff = min([self.draft_k] + [self._budget(i) for i in alive])
+        drafts = self.propose(draft_params, t0, k_eff)
+        # fused verify: [t0, drafts] concat, the (B, k+1, V) forward and
+        # the per-row verdict argmax all run in ONE dispatch, and the
+        # cycle pays ONE host sync for drafts + verdict together
+        lg, verdict = self.kv.verify(params, t0, drafts, alive)
+        # the drafter's feeds advanced every row's draft position by
+        # k_eff + 1; survivors are resynced to the verifier length by the
+        # scheduler after rewind (see sync_slot)
+        self.draft_lengths += k_eff + 1
+        drafts_np, verdict_np = jax.device_get((drafts, verdict))
+        match = drafts_np == verdict_np
+        # longest matching prefix: index of first mismatch (or k_eff)
+        accept = np.where(match.all(axis=1), k_eff,
+                          np.argmin(match, axis=1))
+        self.cycles += 1
+        self.proposed += k_eff * len(alive)
+        return k_eff, accept, drafts_np, lg
+
+    def _budget(self, slot: int) -> int:
+        """Remaining token budget of an alive slot (>= 1 by the caller's
+        retirement invariant) — the cap that keeps verify writes inside
+        the slot's reserved blocks."""
+        s = self._sched.slots[slot]
+        return s.req.max_new_tokens - len(s.tokens)
+
+    def bind(self, scheduler) -> None:
+        self._sched = scheduler
+
+    def sync_slot(self, slot: int) -> None:
+        """After the scheduler rewound the verifier, mirror the accepted
+        length into the draft clock (draft rewind is position-only)."""
+        self.draft_lengths[slot] = int(self.kv._lengths[slot])
+
+    def stats(self) -> Dict[str, Any]:
+        al = np.asarray(self.accepted_len_log, np.float64)
+        tail = {f"p{q}": float(np.percentile(al, q)) for q in (50, 95)} \
+            if al.size else {}
+        return {"spec_cycles": self.cycles,
+                "draft_tokens_proposed": self.proposed,
+                "draft_tokens_accepted": self.accepted,
+                "acceptance_rate": (self.accepted / self.proposed
+                                    if self.proposed else 0.0),
+                "accepted_len": tail}
+
+
+def _admit_draft_rows(pool, side, slot):
+    """Scatter the 1-row draft prefill cache into row ``slot`` of the
+    draft pool (batch-leading leaves at axis 0, scan-stacked period leaves
+    at axis 1). ``pos`` is host-managed and left untouched."""
+    out = dict(pool)
+
+    def r0(a, b):
+        return a.at[slot].set(b[0].astype(a.dtype))
+
+    def r1(a, b):
+        return a.at[:, slot].set(b[:, 0].astype(a.dtype))
+
+    for key in pool:
+        if key == "pos":
+            continue
+        out[key] = jax.tree_util.tree_map(
+            r1 if key == "periods" else r0, pool[key], side[key])
+    return out

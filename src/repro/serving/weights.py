@@ -44,13 +44,20 @@ from repro.quant.qtypes import QuantReport
 
 @dataclasses.dataclass(frozen=True)
 class WeightVersion:
-    """One immutable generation of serving weights."""
+    """One immutable generation of serving weights.
+
+    ``draft_params`` is the self-speculative drafter tree (a lower-bit
+    quantization of the SAME source the target ``params`` came from),
+    staged and swapped atomically with the target so a reload can never
+    pair a new verifier with an old drafter. None when the store has no
+    draft pipeline (speculation off)."""
     version: int                       # monotonically increasing, from 1
     params: Any                        # serving tree (fp, fake-quant, qdict…)
     report: Optional[QuantReport] = None
     source: str = "init"               # "init" | "ckpt:<step>" | caller tag
     step: Optional[int] = None         # checkpoint step, when applicable
     staged_ms: float = 0.0             # quantize/prepare + device wall time
+    draft_params: Any = None           # speculative drafter tree (or None)
 
 
 def make_weight_pipeline(model, cfg):
@@ -91,6 +98,37 @@ def make_weight_pipeline(model, cfg):
     return model, quantize_fn, (_unstack if unroll else (lambda t: t))
 
 
+def make_draft_quantize_fn(model, cfg):
+    """``fp tree -> draft serving tree`` for self-speculative serving.
+
+    The drafter is the same checkpoint quantized at ``cfg.draft_bits``
+    (data-free, sub-second — SQuant makes draft models free), prepared
+    for the SAME model the target pipeline serves: the unroll decision
+    mirrors :func:`make_weight_pipeline` so both trees match the (possibly
+    scan-unrolled) serving stack. When the target serves fp
+    (``quantize_weights`` None) the drafter still quantizes — the ladder
+    needs a cheaper tree below the verifier — defaulting to 'squant'.
+    """
+    from repro.core.pipeline import quantize_tree
+    from repro.models.transformer import n_periods, unstack_stack
+
+    base_cfg = model.cfg
+    unroll = bool(cfg.quantize_weights) and not cfg.dequantize_for_compute
+    method = cfg.quantize_weights or "squant"
+
+    def draft_fn(fp_tree):
+        if unroll and isinstance(fp_tree, dict) \
+                and "periods" in fp_tree.get("stack", {}):
+            fp_tree = dict(fp_tree)
+            fp_tree["stack"] = unstack_stack(fp_tree["stack"],
+                                             n_periods(base_cfg))
+        tree, _ = quantize_tree(fp_tree, method=method, bits=cfg.draft_bits,
+                                dequantize=cfg.dequantize_for_compute)
+        return tree
+
+    return draft_fn
+
+
 class WeightStore:
     """Double-buffered, versioned owner of serving weights.
 
@@ -102,12 +140,19 @@ class WeightStore:
     def __init__(self, quantize_fn: Optional[Callable] = None,
                  fp_params: Any = None, *, serving_params: Any = None,
                  prepare_fn: Optional[Callable] = None,
+                 draft_quantize_fn: Optional[Callable] = None,
                  report: Optional[QuantReport] = None, source: str = "init"):
         if (fp_params is None) == (serving_params is None):
             raise ValueError("provide exactly one of fp_params or "
                              "serving_params")
         self._quantize_fn = quantize_fn
         self._prepare_fn = prepare_fn or (lambda t: t)
+        # speculative serving: fp tree -> drafter tree, built alongside the
+        # target in _build_and_publish so every version is a (target,
+        # draft) pair. Requires fp sources: a quantized-native checkpoint
+        # reload cannot rebuild the drafter, so such stages fail into
+        # ``errors`` and serving continues on the previous pair.
+        self._draft_quantize_fn = draft_quantize_fn
         self._lock = threading.Lock()
         self._counter = 0
         self._live: Optional[WeightVersion] = None
@@ -151,15 +196,18 @@ class WeightStore:
         with self._lock:
             return self._staged is not None
 
-    def staged_info(self) -> Optional[Dict[str, Any]]:
-        """``{"version", "age_ms"}`` of the staged version, or None.
-        ``age_ms`` is how long the version has been waiting — schedulers
-        compare it against their swap deadline."""
+    def staged_info(self) -> Optional["StagedInfo"]:
+        """:class:`repro.serving.api.StagedInfo` for the staged version,
+        or None. ``age_ms`` is how long the version has been waiting —
+        schedulers compare it against their swap deadline. (Supports
+        ``["key"]`` access for pre-api.py dict-style consumers.)"""
+        from repro.serving.api import StagedInfo
         with self._lock:
             if self._staged is None:
                 return None
-            return {"version": self._staged.version,
-                    "age_ms": (time.monotonic() - self._staged_at) * 1e3}
+            return StagedInfo(
+                version=self._staged.version,
+                age_ms=(time.monotonic() - self._staged_at) * 1e3)
 
     # ------------------------------------------------- scheduler drain hooks
     def note_drain(self, in_flight: int = 0) -> None:
@@ -220,13 +268,24 @@ class WeightStore:
                 raise ValueError("store has no quantize_fn; cannot stage "
                                  "fp params")
             tree, rep = self._quantize_fn(fp_params)
+        draft = None
+        if self._draft_quantize_fn is not None:
+            if fp_params is None:
+                # background stage() routes this into ``errors`` and keeps
+                # serving the previous (target, draft) pair — a reload must
+                # never drop the drafter out from under a speculating slot
+                raise ValueError(
+                    "speculative serving stages (target, draft) pairs from "
+                    "one fp source; a quantized-native serving tree cannot "
+                    "rebuild the drafter — reload fp checkpoints instead")
+            draft = self._draft_quantize_fn(fp_params)
         # materialize now so the round-boundary swap is a pointer flip
-        jax.block_until_ready(jax.tree_util.tree_leaves(tree))
+        jax.block_until_ready(jax.tree_util.tree_leaves((tree, draft)))
         staged_ms = (time.perf_counter() - t0) * 1e3
         with self._lock:
             self._counter += 1
             self._staged = WeightVersion(self._counter, tree, rep, source,
-                                         step, staged_ms)
+                                         step, staged_ms, draft)
             self._staged_at = time.monotonic()
 
     def stage(self, fp_params: Any = None, *, serving_params: Any = None,

@@ -422,3 +422,80 @@ def test_paged_weight_swap_flushes_prefix_cache():
     assert outs[0].tokens == fresh[0].tokens
     # the post-swap admission must not have hit the stale prefix cache
     assert _kv_stats(eng)["prefix_hits"] == hits0
+
+
+# ---------------------------------------------------------------------------
+# rewind (speculative rollback)
+# ---------------------------------------------------------------------------
+
+def _advance(kv, params, slots, target):
+    """Decode junk tokens until every slot in ``slots`` sits at
+    ``target`` (per-slot positions, so slots catch up independently)."""
+    tok = jnp.zeros((kv.max_slots,), jnp.int32)
+    while True:
+        active = [i for i in slots if int(kv._lengths[i]) < target]
+        if not active:
+            return
+        kv.decode(params, tok, active)
+
+
+def test_rewind_sweep_invariants_under_cow_and_pressure():
+    """Property-style sweep of the speculative rollback: rewinds of
+    0..k tokens at positions straddling block boundaries, on slots whose
+    prompts COW-share a prefix, in a pool small enough that admissions
+    run under block pressure. After every rewind the full partition /
+    refcount / reservation invariant must hold, and a rewound-across
+    boundary must be re-crossable (the block went back to the slot's
+    reservation, never to another slot's free list)."""
+    model, params = _tiny()
+    eng = _paged(model, params, max_len=32, block_size=4, max_slots=2,
+                 kv_blocks=11)
+    kv = eng.scheduler.kv
+    sp = eng.store.current.params
+    shared = [1, 2, 3, 4, 5, 6]
+    r0 = Request(prompt=shared + [7], max_new_tokens=12, request_id=0)
+    r1 = Request(prompt=shared + [9], max_new_tokens=12, request_id=1)
+    kv.admit([(None, r0)], [0], 0, sp)
+    kv.check_invariants()
+    kv.admit([(None, r1)], [1], 0, sp)     # prefix hit + write-range COW
+    kv.check_invariants()
+    assert kv.stats()["prefix_hits"] >= 1
+
+    for target in (8, 9, 11, 12, 13):      # around bs=4 boundaries
+        for n in range(0, 5):              # rewind 0..k
+            _advance(kv, sp, (0, 1), target)
+            for slot in (0, 1):
+                kv.rewind(slot, n)
+                kv.check_invariants()
+                assert int(kv._lengths[slot]) == target - n
+            _advance(kv, sp, (0, 1), target)   # re-cross the boundary
+            kv.check_invariants()
+
+    kv.retire(0)
+    kv.check_invariants()
+    # third admission re-shares the prefix from the registry while slot 1
+    # is mid-flight, then both slots rewind again under the tighter pool
+    r2 = Request(prompt=shared + [11], max_new_tokens=12, request_id=2)
+    kv.admit([(None, r2)], [0], 0, sp)
+    kv.check_invariants()
+    _advance(kv, sp, (0,), 9)
+    kv.rewind(0, 2)
+    kv.check_invariants()
+    kv.rewind(1, 4)
+    kv.check_invariants()
+    kv.retire(0)
+    kv.retire(1)
+    kv.check_invariants()
+    st = kv.stats()
+    _assert_no_leaks(st)
+
+
+def test_rewind_unsupported_on_contiguous_backend():
+    """The lockstep cache has one shared clock: per-slot rewind must be
+    a clear NotImplementedError, not silent corruption."""
+    model, params = _tiny()
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_len=32, scheduler="continuous",
+                                  max_slots=2))
+    with pytest.raises(NotImplementedError, match="rewind"):
+        eng.scheduler.kv.rewind(0, 1)

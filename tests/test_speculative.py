@@ -1,0 +1,347 @@
+"""Self-speculative decoding tests: the w4 quantization of a checkpoint
+drafts for the w8 verifier on the paged continuous scheduler.
+
+The tentpole contract is **bit-identity**: greedy acceptance emits exactly
+the token stream verifier-only decode would produce — every emitted token
+is either verified-argmax-equal to a draft or the verifier's own argmax at
+the divergence row — so speculation may only change steps-per-token, never
+tokens. The reference engine in every test is the same ``ServeConfig``
+with ``speculative=False`` (whose own bit-identity against the solo
+contiguous oracle is pinned in test_kvcache_paged.py).
+
+Also covered here: the (target, draft) pair staged/swapped atomically by
+the WeightStore, the per-request ``eos_id`` override and auto request ids
+from :mod:`repro.serving.api`, Completion/SchedulerStats speculative
+counters, and the declarative ServeConfig gate matrix (one parametrized
+test per ``CONFIG_GATES`` row).
+"""
+import dataclasses
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import (Completion, Request, SchedulerStats, ServeConfig,
+                           ServeEngine, StagedInfo)
+from repro.serving.engine import CONFIG_GATES
+
+
+def _tiny(seed=0, vocab=256, **over):
+    cfg = get_config("granite-3-8b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32", n_layers=2, d_model=32,
+                              n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                              vocab=vocab, **over)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _paged(model, params, **over):
+    base = dict(max_len=64, scheduler="continuous", max_slots=2,
+                kv_backend="paged", block_size=4,
+                quantize_weights="squant", weight_bits=8)
+    base.update(over)
+    return ServeEngine(model, params, ServeConfig(**base))
+
+
+def _spec(model, params, **over):
+    base = dict(speculative=True, draft_bits=4, draft_k=3)
+    base.update(over)
+    return _paged(model, params, **base)
+
+
+def _reqs():
+    """Mixed lengths, 4 requests on 2 slots: two admit mid-flight while
+    residents are mid-decode (per-slot positions diverge immediately)."""
+    return [Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=12,
+                    request_id=0),
+            Request(prompt=[7, 8, 9, 10, 11, 12, 13, 14, 15],
+                    max_new_tokens=7, request_id=1),
+            Request(prompt=[3, 1, 4], max_new_tokens=15, request_id=2),
+            Request(prompt=[9, 9, 8, 7, 6, 5, 4, 3, 2, 1, 2],
+                    max_new_tokens=4, request_id=3)]
+
+
+def _by_id(outs):
+    return {c.request_id: c for c in outs}
+
+
+def _assert_clean(eng):
+    kv = eng.scheduler.kv
+    kv.check_invariants()
+    st = kv.stats()
+    assert st["blocks_active"] == 0 and st["blocks_reserved"] == 0
+
+
+# ---------------------------------------------------------------------------
+# bit-identity (the tentpole win condition)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("draft_k,block_size", [(1, 4), (3, 4), (5, 8)])
+def test_speculative_bit_identical_mixed_lengths(draft_k, block_size):
+    model, params = _tiny()
+    reqs = _reqs()
+    ref = _by_id(_paged(model, params, block_size=block_size)
+                 .generate(reqs))
+    eng = _spec(model, params, draft_k=draft_k, block_size=block_size)
+    outs = _by_id(eng.generate(reqs))
+    for rid, c in outs.items():
+        assert c.tokens == ref[rid].tokens
+    st = eng.scheduler.stats()
+    assert st["speculative"] and st["spec_cycles"] > 0
+    assert 0 <= st["draft_tokens_accepted"] <= st["draft_tokens_proposed"]
+    _assert_clean(eng)
+
+
+def test_speculative_bit_identical_fp_target():
+    """quantize_weights=None target: the drafter still quantizes (the
+    ladder needs a cheaper tree below the verifier) and the emitted
+    tokens still match fp verifier-only decode exactly."""
+    model, params = _tiny()
+    reqs = _reqs()
+    ref = _by_id(_paged(model, params, quantize_weights=None)
+                 .generate(reqs))
+    eng = _spec(model, params, quantize_weights=None)
+    outs = _by_id(eng.generate(reqs))
+    for rid, c in outs.items():
+        assert c.tokens == ref[rid].tokens
+    _assert_clean(eng)
+
+
+def test_speculative_bit_identical_with_chunked_admission():
+    """prefill_chunk composes: chunked paged admissions run between
+    speculative cycles of the resident slots."""
+    model, params = _tiny()
+    reqs = _reqs()
+    ref = _by_id(_paged(model, params, prefill_chunk=3).generate(reqs))
+    eng = _spec(model, params, prefill_chunk=3)
+    outs = _by_id(eng.generate(reqs))
+    for rid, c in outs.items():
+        assert c.tokens == ref[rid].tokens
+    assert eng.trace_counts["prefill_chunk"] > 0
+    assert eng.trace_counts["verify"] > 0
+    _assert_clean(eng)
+
+
+def test_speculative_eos_retirement_bit_identical():
+    """Global EOS and a per-request ``eos_id`` override both retire at
+    the same token speculation or not — including when the EOS lands
+    mid-accepted-run (the emission loop checks per token, never emits
+    past it)."""
+    model, params = _tiny()
+    reqs = _reqs()
+    base = _by_id(_paged(model, params).generate(reqs))
+    long = base[2].tokens
+    eos = next(t for t in long[:8] if t not in base[0].tokens)
+
+    # global EOS via ServeConfig
+    ref = _by_id(_paged(model, params, eos_id=eos).generate(reqs))
+    outs = _by_id(_spec(model, params, eos_id=eos).generate(reqs))
+    for rid in ref:
+        assert outs[rid].tokens == ref[rid].tokens
+    assert ref[2].tokens == long[:long.index(eos) + 1]
+
+    # per-request override (config eos stays -1: never stop)
+    reqs_o = _reqs()
+    reqs_o[2] = dataclasses.replace(reqs_o[2], eos_id=eos)
+    ref_o = _by_id(_paged(model, params).generate(reqs_o))
+    eng = _spec(model, params)
+    outs_o = _by_id(eng.generate(reqs_o))
+    for rid in ref_o:
+        assert outs_o[rid].tokens == ref_o[rid].tokens
+    assert outs_o[2].tokens == long[:long.index(eos) + 1]
+    assert len(outs_o[0].tokens) == 12      # others unaffected
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# counters / stats plumbing
+# ---------------------------------------------------------------------------
+
+def test_completion_and_stats_speculative_counters():
+    model, params = _tiny()
+    reqs = _reqs()
+    eng = _spec(model, params)
+    outs = eng.generate(reqs)
+    st = eng.scheduler.stats()
+    assert isinstance(st, SchedulerStats)
+    for c in outs:
+        assert 1 <= c.steps <= len(c.tokens)
+        assert 0 <= c.draft_tokens_accepted <= c.draft_tokens_proposed
+    # a draft_k=3 run over 38 budgeted tokens must accept something
+    assert sum(c.draft_tokens_accepted for c in outs) > 0
+    # some completion finished in fewer engine steps than tokens emitted
+    assert any(c.steps < len(c.tokens) for c in outs)
+    # scheduler totals == the per-completion sums
+    assert st["draft_tokens_accepted"] == \
+        sum(c.draft_tokens_accepted for c in outs)
+    assert st["draft_tokens_proposed"] == \
+        sum(c.draft_tokens_proposed for c in outs)
+    assert st["acceptance_rate"] == pytest.approx(
+        st["draft_tokens_accepted"] / st["draft_tokens_proposed"])
+    assert set(st["accepted_len"]) == {"p50", "p95"}
+    assert 1.0 <= st["accepted_len"]["p50"] <= st["accepted_len"]["p95"]
+
+    # non-speculative engines report inert speculative fields
+    ref_eng = _paged(model, params)
+    ref = ref_eng.generate(reqs)
+    rst = ref_eng.scheduler.stats()
+    assert not rst["speculative"] and rst["spec_cycles"] == 0
+    assert rst["acceptance_rate"] == 0.0
+    for c in ref:
+        assert c.steps == len(c.tokens)
+        assert c.draft_tokens_proposed == c.draft_tokens_accepted == 0
+
+
+def test_trace_counts_draft_and_verify_jits():
+    """One verify trace per k_eff width, one chain trace per k_eff, one
+    draft prefill/admit pair — and the non-speculative baseline keeps its
+    exact trace dict (no speculative keys leak in)."""
+    model, params = _tiny()
+    eng = _spec(model, params)
+    eng.generate(_reqs())
+    tc = eng.trace_counts
+    assert tc["verify"] >= 1
+    assert tc["draft_chain"] >= 1
+    assert tc["draft_prefill"] >= 1 and tc["draft_admit"] >= 1
+
+    ref = _paged(model, params)
+    ref.generate(_reqs())
+    assert "verify" not in ref.trace_counts
+    assert "draft_chain" not in ref.trace_counts
+
+
+# ---------------------------------------------------------------------------
+# (target, draft) weight pair
+# ---------------------------------------------------------------------------
+
+def test_weight_store_stages_target_draft_pair():
+    model, params = _tiny()
+    eng = _spec(model, params)
+    v1 = eng.store.current
+    assert v1.draft_params is not None
+
+    def leaf(tree):
+        return np.asarray(jax.tree_util.tree_leaves(tree)[0])
+
+    # stage a different checkpoint: BOTH trees of the pair move together
+    _, params2 = _tiny(seed=1)
+    eng.store.stage(params2, source="test", block=True)
+    info = eng.store.staged_info()
+    assert isinstance(info, StagedInfo) and info.version == 2
+    assert info["version"] == 2 and info.age_ms >= 0.0
+    outs = eng.generate(_reqs())
+    assert all(c.weights_version == 2 for c in outs)
+    v2 = eng.store.current
+    assert v2.version == 2 and v2.draft_params is not None
+    assert not np.array_equal(leaf(v2.draft_params), leaf(v1.draft_params))
+
+    # tokens from the swapped pair match a fresh engine seeded on params2
+    ref = _by_id(_paged(model, params2).generate(_reqs()))
+    for c in outs:
+        assert c.tokens == ref[c.request_id].tokens
+
+
+def test_weight_store_rejects_draft_without_fp_source():
+    """A quantized-native serving tree cannot rebuild the drafter: the
+    stage must fail (into ``errors`` on the background path) and serving
+    must continue on the previous pair."""
+    from repro.serving.weights import WeightStore, make_draft_quantize_fn
+
+    model, params = _tiny()
+    cfg = ServeConfig(max_len=64, scheduler="continuous",
+                      kv_backend="paged", block_size=4, speculative=True)
+    draft_fn = make_draft_quantize_fn(model, cfg)
+    store = WeightStore(lambda t: (t, None), params,
+                        draft_quantize_fn=draft_fn)
+    assert store.current.draft_params is not None
+    with pytest.raises(ValueError, match="fp"):
+        store.stage(serving_params=params, source="ckpt", block=True)
+    assert store.version == 1
+
+
+# ---------------------------------------------------------------------------
+# serving API surface (repro.serving.api)
+# ---------------------------------------------------------------------------
+
+def test_request_auto_ids_and_aliases():
+    r1, r2 = Request(prompt=[1, 2]), Request(prompt=[3])
+    assert isinstance(r1.request_id, int) and r1.request_id != r2.request_id
+    assert Request(prompt=[1], request_id=7).request_id == 7
+    assert r1.eos_id is None
+
+    # deprecated aliases point at the one definition
+    from repro.serving import api, engine, scheduler
+    assert scheduler.Request is api.Request is engine.Request
+    assert scheduler.Completion is api.Completion is Completion
+
+    # dict-style access shim on the typed stats records
+    info = StagedInfo(version=3, age_ms=1.5)
+    assert info["version"] == 3 and info.get("missing", 0) == 0
+    assert info.to_dict() == {"version": 3, "age_ms": 1.5}
+    with pytest.raises(KeyError):
+        info["nope"]
+    st = SchedulerStats(kind="round", steps=4)
+    assert st["steps"] == 4 and st.to_dict()["kind"] == "round"
+    # Completion stays a plain dataclass with the speculative counters
+    c = Completion(request_id=1, tokens=[4, 5], prefill_ms=1.0,
+                   decode_ms=2.0)
+    assert c.steps == 0 and c.draft_tokens_proposed == 0
+
+
+# ---------------------------------------------------------------------------
+# config gate matrix
+# ---------------------------------------------------------------------------
+
+_PAGED = dict(scheduler="continuous", kv_backend="paged")
+_GATE_CASES = [
+    ("prefill_chunk_range", dict(prefill_chunk=-1),
+     ValueError, "prefill_chunk must be >= 0"),
+    ("kv_backend_enum", dict(kv_backend="mmap"),
+     ValueError, "unknown kv_backend"),
+    ("block_size_range", dict(block_size=0, **_PAGED),
+     ValueError, "block_size must be >= 1"),
+    ("block_size_divides", dict(block_size=5, **_PAGED),
+     ValueError, "must divide max_len"),
+    ("kv_blocks_range", dict(kv_blocks=-1, **_PAGED),
+     ValueError, "kv_blocks must be >= 0"),
+    ("draft_k_range", dict(speculative=True, draft_k=0, **_PAGED),
+     ValueError, "draft_k must be >= 1"),
+    ("draft_bits_range", dict(speculative=True, draft_bits=1, **_PAGED),
+     ValueError, "must be in [2, 8]"),
+    ("paged_x_round", dict(kv_backend="paged"),
+     NotImplementedError, "unsupported combination: kv_backend='paged'"),
+    ("speculative_x_contiguous", dict(speculative=True,
+                                      scheduler="continuous"),
+     NotImplementedError, "unsupported combination: speculative decoding"),
+    ("speculative_x_quant_kv", dict(speculative=True, quantize_kv=True,
+                                    **_PAGED),
+     NotImplementedError, "unsupported combination: speculative x quantize"),
+    ("speculative_x_sampling", dict(speculative=True, temperature=0.7,
+                                    **_PAGED),
+     NotImplementedError, "unsupported combination: speculative x sampling"),
+]
+
+
+@pytest.mark.parametrize("name,over,err,msg", _GATE_CASES,
+                         ids=[c[0] for c in _GATE_CASES])
+def test_config_gate_matrix(name, over, err, msg):
+    with pytest.raises(err, match=re.escape(msg)):
+        ServeConfig(max_len=64, **over)
+
+
+def test_gate_matrix_covers_every_row():
+    """Adding a CONFIG_GATES row without a matrix case fails here; every
+    feature-pair row must carry the uniform prefix."""
+    assert {c[0] for c in _GATE_CASES} == {g.name for g in CONFIG_GATES}
+    for g in CONFIG_GATES:
+        if "_x_" in g.name:
+            assert isinstance(g.message, str)
+            assert g.message.startswith("unsupported combination: ")
+
+
+def test_valid_speculative_config_passes_gates():
+    cfg = ServeConfig(max_len=64, speculative=True, **_PAGED)
+    assert cfg.draft_bits == 4 and cfg.draft_k == 4
