@@ -638,6 +638,94 @@ def bench_kv_bytes(smoke: bool = False, repeats: int = 3,
     return out
 
 
+# one ladder row per newly-ungated architecture feature, on reduced
+# registry configs shrunk to 2 layers (agreement is a property of the
+# mixer math, not the width — tiny widths keep the ladder cheap enough
+# for the CI bench gate). The jamba row isolates the mamba mixer
+# (moe=None, one mamba + one attention block); the mixtral row measures
+# the composed sliding_window x moe stack.
+CHUNKED_ARCH_ROWS = (
+    ("sliding_window", "granite-3-8b", dict(n_layers=2, window=8)),
+    ("mla", "minicpm3-4b", dict(n_layers=2)),
+    ("moe", "moonshot-v1-16b-a3b", dict(n_layers=2)),
+    ("mamba", "jamba-1.5-large-398b",
+     dict(n_layers=2, block_pattern=("m", "a"), moe=None)),
+    ("rwkv", "rwkv6-1.6b", dict(n_layers=2)),
+    ("sliding_window+moe", "mixtral-8x7b", dict(n_layers=2, window=8)),
+)
+
+
+def chunked_archs_workload(smoke: bool):
+    """One admission wave (requests == slots, so chunked and monolithic
+    admission pad the batch identically and the only difference measured
+    is the chunk-continuation math itself)."""
+    slots = 4 if smoke else 8
+    new_tokens = 8 if smoke else 12
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(slots):
+        plen = int(rng.integers(5, 12))
+        prompt = [int(t) for t in rng.integers(1, 200, size=plen)]
+        reqs.append(Request(prompt=prompt, max_new_tokens=new_tokens,
+                            request_id=i))
+    return reqs, {"slots": slots, "new_tokens": new_tokens,
+                  "max_len": 64, "chunks": (1, 5)}
+
+
+def bench_chunked_archs(smoke: bool = False, report=print) -> Dict:
+    """Per-architecture chunked-prefill agreement ladder.
+
+    For every architecture feature that makes chunk-continuation prefill
+    tolerance-equivalent rather than bit-identical (sliding-window ring
+    rotation, MLA latent re-expansion, per-chunk MoE capacity routing,
+    mamba/rwkv recurrent-prefix reassociation — see
+    ``docs/equivalence.md``), run the chunked continuous engine against
+    its own monolithic-prefill oracle and report the worst teacher-forced
+    greedy agreement across chunk widths. ``agreement`` (the min) is
+    gated in ``scripts/check_bench.py`` against the row's composed
+    ``AGREEMENT_BUDGETS`` floor — these rows are the evidence that the
+    chunked-prefill arch gates stayed lifted."""
+    from repro.serving.equivalence import (agreement_budget,
+                                           greedy_token_agreement,
+                                           oracle_tokens)
+    reqs, wl = chunked_archs_workload(smoke)
+    out: Dict = dict(wl, chunks=list(wl["chunks"]), rows={})
+    for label, arch, over in CHUNKED_ARCH_ROWS:
+        cfg = dataclasses.replace(get_config(arch, reduced=True),
+                                  dtype="float32", **over)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        base = ServeConfig(max_batch=wl["slots"], max_len=wl["max_len"],
+                           scheduler="continuous")
+        oracle_eng = ServeEngine(model, params, base)
+        oracle = oracle_tokens(oracle_eng.generate(reqs))
+        oracle_eng.close()
+        by_chunk = {}
+        compared = 0
+        for chunk in wl["chunks"]:
+            ccfg = dataclasses.replace(base, prefill_chunk=chunk)
+            eng = ServeEngine(model, params, ccfg)
+            rep = greedy_token_agreement(eng, reqs, oracle)
+            eng.close()
+            by_chunk[str(chunk)] = rep.rate
+            compared = rep.compared
+        budget = agreement_budget(
+            dataclasses.replace(base, prefill_chunk=wl["chunks"][0]),
+            model.cfg)
+        row = {"arch": cfg.name,
+               "features": list(model.arch_features()),
+               "budget": budget,
+               "agreement": min(by_chunk.values()),
+               "by_chunk": by_chunk,
+               "compared": compared}
+        out["rows"][label] = row
+        report(f"[serving] chunked {label:18s}: agreement "
+               f"{row['agreement']:.4f} over {compared} tokens x "
+               f"{len(by_chunk)} chunk widths (budget {budget:.3f}, "
+               f"{cfg.name})")
+    return out
+
+
 def _spec_model():
     """A deliberately narrow LM for the speculative experiment: decode
     steps must be *dispatch/sync-bound* — the production decode regime
@@ -772,6 +860,8 @@ def run(report=print, smoke: bool = False,
                "paged_chunked": bench_paged_chunked(smoke=smoke,
                                                     report=report),
                "kv_bytes": bench_kv_bytes(smoke=smoke, report=report),
+               "chunked_archs": bench_chunked_archs(smoke=smoke,
+                                                    report=report),
                "speculative": bench_speculative(smoke=smoke,
                                                 report=report)}
     with open(out_path, "w") as f:

@@ -15,6 +15,12 @@ and paged admission alike) and paged tokens to the contiguous backend;
 the int8-KV config's teacher-forced greedy agreement vs the fp paged
 oracle must stay at or above its 0.98 tolerance budget and its
 bytes-per-position ratio at or under 0.6x fp;
+every row of the per-architecture chunked-prefill agreement ladder
+(sliding-window / MLA / MoE / mamba / rwkv, plus the composed mixtral
+stack) must stay at or above its composed ``AGREEMENT_BUDGETS`` floor,
+fresh and committed alike — the machine-checked evidence that the
+chunked-prefill architecture gates stay lifted (see
+``docs/equivalence.md``);
 self-speculative tokens must stay bit-identical to w8-only decode at
 every draft bit-width measured;
 the *committed baseline's* chunked/monolithic p99 ratios must stay at or
@@ -179,6 +185,28 @@ def main() -> None:
     check("serving.kv-bytes.throughput-ratio", ratio >= floor,
           f"int8/fp throughput {ratio:.2f}x (baseline {base_ratio:.2f}x, "
           f"floor {floor:.2f}x)")
+
+    # --- serving: every ungated architecture must keep its chunked-
+    # prefill agreement budget (the evidence the per-arch chunked-prefill
+    # gates stayed lifted: each ladder row runs prefill_chunk > 0 on the
+    # continuous scheduler and owes its composed AGREEMENT_BUDGETS floor,
+    # fresh and committed alike — budgets are deterministic-greedy floors,
+    # not wall-clock metrics, so no regression tolerance applies) --------
+    fa, ba = (fresh_serving["chunked_archs"]["rows"],
+              base_serving["chunked_archs"]["rows"])
+    for label, brow in ba.items():
+        budget = brow["budget"]
+        check(f"serving.chunked-archs.{label}.baseline-agreement",
+              brow["agreement"] >= budget,
+              f"committed agreement {brow['agreement']:.4f} over "
+              f"{brow['compared']} tokens (floor {budget:.3f}, "
+              f"{brow['arch']})")
+        frow = fa.get(label)
+        check(f"serving.chunked-archs.{label}.agreement",
+              frow is not None and frow["agreement"] >= budget,
+              "ladder row missing from fresh run" if frow is None else
+              f"fresh agreement {frow['agreement']:.4f} over "
+              f"{frow['compared']} tokens (floor {budget:.3f})")
 
     # --- serving: self-speculative decode must stay bit-identical and
     # keep paying for itself ----------------------------------------------

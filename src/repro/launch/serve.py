@@ -234,7 +234,7 @@ def main():
             oracle = oracle_tokens(oracle_eng.generate(reqs))
             oracle_eng.close()
             rep = greedy_token_agreement(eng, reqs, oracle)
-            budget = agreement_budget(eng.cfg)
+            budget = agreement_budget(eng.cfg, eng.model.cfg)
             print(f"[serve] greedy agreement vs fp-KV oracle: "
                   f"{rep.rate:.4f} ({rep.matched}/{rep.compared} tokens, "
                   f"budget {budget:.2f} at production widths)")

@@ -150,6 +150,34 @@ def _cache_write(cache, k, v, pos, window):
     return cache
 
 
+def _ring_scatter(cache, k, v, pos):
+    """Scatter-write a chunk of ``s`` tokens into a ring-buffer cache at
+    slots ``(pos + i) % slots`` (``pos`` may be traced). Unlike
+    ``_cache_write``'s contiguous ``dynamic_update_slice`` (which clamps at
+    the cache edge instead of wrapping), this handles a chunk that straddles
+    the ring boundary."""
+    slots = cache["k"].shape[1]
+    if k.shape[1] >= slots:
+        # chunk wider than the ring: only the newest ``slots`` tokens
+        # survive; dropping the rest keeps ``idx`` duplicate-free
+        # (scatter-set order is unspecified under duplicates)
+        off = k.shape[1] - slots
+        k, v, pos = k[:, off:], v[:, off:], pos + off
+    idx = (pos + jnp.arange(k.shape[1])) % slots
+    cache = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quant_tok(k)
+        vq, vs = _quant_tok(v)
+        cache["k"] = cache["k"].at[:, idx].set(kq)
+        cache["v"] = cache["v"].at[:, idx].set(vq)
+        cache["k_scale"] = cache["k_scale"].at[:, idx].set(ks)
+        cache["v_scale"] = cache["v_scale"].at[:, idx].set(vs)
+        return cache
+    cache["k"] = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+    return cache
+
+
 def _cache_read(cache) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if "k_scale" in cache:
         k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
@@ -275,14 +303,14 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
     :mod:`repro.kernels.paged_attention`).
     """
     if cfg.mla is not None:
-        if mode in ("chunk", "verify"):
+        if mode == "verify":
             raise NotImplementedError(
-                f"{mode!r} mode is not implemented for MLA attention")
+                "'verify' mode is not implemented for MLA attention")
         return _mla_attention(params, x, cfg=cfg, rope=rope, mode=mode,
                               cache=cache, pos=pos)
-    if mode in ("chunk", "verify") and cfg.window:
+    if mode == "verify" and cfg.window:
         raise NotImplementedError(
-            f"{mode!r} mode is not implemented for sliding-window "
+            "'verify' mode is not implemented for sliding-window "
             "ring-buffer caches")
     b, s, d = x.shape
     hd = cfg.head_dim
@@ -305,6 +333,33 @@ def attention(params, x, *, cfg, rope, mode: str = "train",
                                  unroll=cfg.unroll_chunks)
         if mode == "prefill":
             cache = _cache_write(cache, k, v, 0, cfg.window)
+    elif mode == "chunk" and cfg.window:
+        # ring-buffer continuation: the chunk's queries attend over the ring
+        # *as of chunk entry* (the trailing min(pos, slots) keys)
+        # concatenated with the chunk's own keys — attention runs before the
+        # ring write, because writing first would evict up to s-1 in-window
+        # keys the chunk's earliest rows still need. Each ring slot's
+        # absolute key position is reconstructed from the clock (the largest
+        # position ≡ slot (mod slots) already written; negative → never
+        # written this admission → masked), so stale rows from a reused side
+        # cache contribute exact zeros. The key axis is a rotation of the
+        # monolithic ordering → tokens agree up to float reassociation,
+        # served under the "sliding_window" agreement budget.
+        kc, vc = _cache_read(cache)
+        kc = shard_act(kc, ("batch", "seq_shard", "kv_heads", None))
+        vc = shard_act(vc, ("batch", "seq_shard", "kv_heads", None))
+        slots = kc.shape[1]
+        j = jnp.arange(slots)
+        kpos_ring = j + ((pos - j - 1) // slots) * slots
+        kpos = jnp.concatenate([kpos_ring, pos + jnp.arange(s)])
+        rows = pos + jnp.arange(s)
+        ok = ((kpos[None, :] >= 0) & (kpos[None, :] <= rows[:, None])
+              & (kpos[None, :] > rows[:, None] - cfg.window))
+        mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+        k_all = jnp.concatenate([kc.astype(q.dtype), k.astype(q.dtype)], 1)
+        v_all = jnp.concatenate([vc.astype(q.dtype), v.astype(q.dtype)], 1)
+        out = _grouped_attention(q, k_all, v_all, mask, scale)
+        cache = _ring_scatter(cache, k, v, pos)
     elif mode == "chunk":
         # partial-prefill continuation: write this chunk at the clock, then
         # run the prefill einsum against the whole cache with the rows'
@@ -471,6 +526,26 @@ def _mla_attention(params, x, *, cfg, rope, mode, cache, pos):
                 cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, 1)
             cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
                 cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, 1)
+    elif mode == "chunk":
+        # partial-prefill continuation, mirroring the dense chunk path:
+        # write the chunk's compressed rows at the clock, re-expand the
+        # WHOLE cache, and mask the unwritten suffix by absolute position.
+        # Unwritten rows are zeros → rms_norm(0) = 0 → their expanded K/V
+        # are masked before softmax, so they contribute exact zeros; the
+        # expansion itself is recomputed per chunk, which can reassociate
+        # vs the monolithic prefill gemm — served under the "mla"
+        # agreement budget (measured ≈ exact).
+        cache = dict(cache)
+        cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, 1)
+        cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), pos, 1)
+        ckv_all = shard_act(cache["c_kv"], ("batch", "seq_shard", None))
+        k, v = expand_kv(ckv_all.astype(x.dtype),
+                         cache["k_rope"].astype(x.dtype))
+        out = _chunked_attention(qfull, k, v, scale=scale, causal=True,
+                                 window=None, q_chunk=cfg.attn_q_chunk,
+                                 unroll=cfg.unroll_chunks, row0=pos)
     else:
         cache = dict(cache)
         cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(

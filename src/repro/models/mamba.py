@@ -139,6 +139,25 @@ def mamba(params, x: jnp.ndarray, *, d_state: int = 16,
                 "h": h_last,                                    # (B, DI, N)
                 "conv": xr[:, -(d_conv - 1):, :],
             }
+    elif mode == "chunk":
+        # partial-prefill continuation: the depthwise conv reads its left
+        # context from the carried ``conv`` tail instead of zero padding,
+        # and the associative scan enters at the carried ``h`` — the
+        # monolithic prefill recurrence up to float reassociation of the
+        # scan's chunk-split grouping, served under the measured "mamba"
+        # agreement budget (see repro.serving.equivalence).
+        d_conv = params["conv_w"].shape[0]
+        xp = jnp.concatenate([state["conv"].astype(xr.dtype), xr], axis=1)
+        conv = sum(xp[:, i:i + s, :] *
+                   params["conv_w"][i][None, None].astype(xr.dtype)
+                   for i in range(d_conv))
+        xc = jax.nn.silu(conv + params["conv_b"].astype(xr.dtype))
+        a_t, bx, c = _ssm_inputs(params, xc, dt_rank, d_state)
+        h_all, h_last = _chunk_scan(a_t, bx, state["h"])
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c.astype(jnp.float32))
+        y = y.astype(x.dtype) + xc * params["d_skip"].astype(x.dtype)
+        new_state = {"h": h_last,
+                     "conv": xp[:, s:, :].astype(jnp.float32)}
     else:  # decode: one token
         d_conv = params["conv_w"].shape[0]
         conv_buf = jnp.concatenate([state["conv"], xr], axis=1)  # (B,dc,DI)

@@ -18,6 +18,29 @@ from repro.models.transformer import (apply_encoder, apply_stack, init_cache,
                                       _rope_dim)
 
 
+def arch_features(cfg) -> Tuple[str, ...]:
+    """Sequence-mixer features that make chunked prefill
+    tolerance-equivalent (rather than bit-identical) to the monolithic
+    path. Keys match ``repro.serving.equivalence.AGREEMENT_BUDGETS`` and
+    compose multiplicatively there when features stack (e.g. mixtral is
+    ``("sliding_window", "moe")``). An empty tuple means a plain-attention
+    dense stack whose chunked prefill is exact."""
+    from repro.models.transformer import layer_plan
+    plan = layer_plan(cfg)
+    feats = []
+    if cfg.mla is not None:
+        feats.append("mla")
+    if cfg.window:
+        feats.append("sliding_window")
+    if any(moe for _, moe in plan):
+        feats.append("moe")
+    if any(kind == "m" for kind, _ in plan):
+        feats.append("mamba")
+    if any(kind == "rwkv" for kind, _ in plan):
+        feats.append("rwkv")
+    return tuple(feats)
+
+
 def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     """Sharded-vocab-friendly mean cross-entropy (one-hot dot, fp32)."""
     lg = logits.astype(jnp.float32)
@@ -156,10 +179,16 @@ class LM:
         one-row gemm as a matvec whose accumulation order differs from the
         monolithic prefill's, and the dummy row (whose cache write lands one
         past the clock, always overwritten before any masked-in read) is the
-        cheapest way to stay on the gemm path.
+        cheapest way to stay on the gemm path. Stacks with recurrent state
+        or MoE routing skip the pad — a dummy row would fold into the
+        carried state / compete for expert capacity and change real
+        outputs; those stacks serve under a measured agreement budget
+        rather than bit-identity anyway (see repro.serving.equivalence).
         """
         toks = batch["tokens"]
-        singleton = toks.shape[1] == 1
+        pad_ok = not any(f in ("moe", "mamba", "rwkv")
+                         for f in arch_features(self.cfg))
+        singleton = toks.shape[1] == 1 and pad_ok
         if singleton:
             p0 = caches["pos"]
             toks = jnp.concatenate([toks, toks[:, -1:]], axis=1)
@@ -170,15 +199,32 @@ class LM:
             return logits[:, 0], caches
         return logits[:, -1], caches
 
+    def arch_features(self) -> Tuple[str, ...]:
+        """See :func:`arch_features`."""
+        return arch_features(self.cfg)
+
     def supports_chunked_prefill(self) -> bool:
-        """Chunked prefill is exact only for stacks where every mixer is
-        plain (non-MLA, non-windowed) attention with a dense FFN: recurrent
-        mixers and MoE capacity routing are chunk-split-dependent."""
-        from repro.models.transformer import layer_plan
-        return (not self.cfg.is_encdec and self.cfg.mla is None
-                and not self.cfg.window
-                and all(kind == "a" and not moe
-                        for kind, moe in layer_plan(self.cfg)))
+        """Every decoder-only stack has a chunk-continuation path: plain
+        dense attention is bit-exact; MLA / sliding-window / MoE /
+        recurrent mixers serve under their measured per-architecture
+        agreement budgets (``repro.serving.equivalence``). Only
+        encoder-decoder models (round-only scheduling) lack one."""
+        return not self.cfg.is_encdec
+
+    def chunked_prefill_exact(self) -> bool:
+        """True when chunked prefill reproduces the monolithic path
+        bit-for-bit (plain-attention dense stacks)."""
+        return self.supports_chunked_prefill() \
+            and not arch_features(self.cfg)
+
+    def has_recurrent_state(self) -> bool:
+        """True when the cache carries recurrent (non-positional) state —
+        mamba conv/ssm carries or rwkv token-shift/wkv carries. The
+        serving side-cache allocator must not reuse such caches across
+        admissions (stale state is not masked out the way stale KV rows
+        are)."""
+        feats = arch_features(self.cfg)
+        return "mamba" in feats or "rwkv" in feats
 
     def decode_step(self, params, tokens, caches
                     ) -> Tuple[jnp.ndarray, dict]:

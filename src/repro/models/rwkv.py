@@ -136,7 +136,15 @@ def rwkv_timemix(p, x, *, head_dim: int = 64, state: Optional[Dict] = None,
                  ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     b, s, d = x.shape
     h = d // head_dim
-    x_prev = state["x_tm"] if state is not None else jnp.zeros_like(x[:, 0])
+    # train/prefill start a sequence: entry state is zeros by definition
+    # (a reused serving side cache may hold a retired request's state, so
+    # prefill must not read it). "chunk" is the prefill *continuation*: it
+    # folds the carried token-shift row and wkv state across the chunk
+    # boundary — the monolithic recurrence up to float reassociation of
+    # the scan grouping (the measured "rwkv" agreement budget).
+    seq_start = mode in ("train", "prefill") or state is None
+    x_prev = jnp.zeros_like(x[:, 0]) if seq_start \
+        else state["x_tm"].astype(x.dtype)
     xx = _token_shift(x, x_prev)
     mix = _mix_streams(p, x, xx)
     r = _heads(linear(p["wr"], mix["r"]), head_dim)
@@ -148,12 +156,12 @@ def rwkv_timemix(p, x, *, head_dim: int = 64, state: Optional[Dict] = None,
     logw = _heads(logw, head_dim)
     u = p["u"].astype(jnp.float32)
 
-    s0 = state["wkv"] if state is not None else \
-        jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    s0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32) if seq_start \
+        else state["wkv"]
     rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
     if mode == "decode" or s == 1:
         o, s_fin = wkv_scan(rf, kf, vf, logw, u, s0)
-    elif mode in ("train", "prefill"):
+    elif mode in ("train", "prefill", "chunk"):
         if s % chunk == 0:
             o, s_fin = wkv_chunked(rf, kf, vf, logw, u, s0, chunk, unroll)
         else:
@@ -162,7 +170,7 @@ def rwkv_timemix(p, x, *, head_dim: int = 64, state: Optional[Dict] = None,
     o = rms_norm(p["ln_x"], o) * g
     out = linear(p["wo"], o)
     new_state = None
-    if mode in ("prefill", "decode"):
+    if mode in ("prefill", "decode", "chunk"):
         new_state = {"x_tm": x[:, -1], "wkv": s_fin}
     return out, new_state
 
@@ -179,12 +187,15 @@ def init_rwkv_channelmix(key, d_model: int, d_ff: int) -> Dict:
 
 def rwkv_channelmix(p, x, *, state: Optional[Dict] = None,
                     mode: str = "train") -> Tuple[jnp.ndarray, Optional[Dict]]:
-    x_prev = state["x_cm"] if state is not None else jnp.zeros_like(x[:, 0])
+    seq_start = mode in ("train", "prefill") or state is None
+    x_prev = jnp.zeros_like(x[:, 0]) if seq_start \
+        else state["x_cm"].astype(x.dtype)
     xx = _token_shift(x, x_prev)
     dx = xx - x
     xk = x + dx * p["mu"]["k"].astype(x.dtype)
     xr = x + dx * p["mu"]["r"].astype(x.dtype)
     kk = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
     out = jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], kk)
-    new_state = {"x_cm": x[:, -1]} if mode in ("prefill", "decode") else None
+    new_state = {"x_cm": x[:, -1]} \
+        if mode in ("prefill", "decode", "chunk") else None
     return out, new_state

@@ -85,12 +85,10 @@ def apply_block(p, x, *, cfg, kind: str, use_moe: bool, rope, mode: str,
                 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
     """Returns (x, new_cache, moe_aux)."""
     aux = jnp.zeros((), jnp.float32)
-    if mode in ("chunk", "verify") and kind != "a":
-        # recurrent mixers fold the whole prefix into their state with
-        # chunk-size-dependent scan groupings — continuing one from a
-        # partial state cannot reproduce the monolithic prefill bit-for-bit,
-        # so the scheduler refuses chunked prefill (and the speculative
-        # multi-position verify) for these stacks
+    if mode == "verify" and kind != "a":
+        # the speculative multi-position verify scores every draft row as
+        # if it were a lockstep decode step; recurrent mixers would need a
+        # per-row state rewind to do that, so verify stays attention-only
         raise NotImplementedError(
             f"{mode!r} mode is not implemented for {kind!r} blocks")
     if kind == "rwkv":
@@ -128,10 +126,17 @@ def apply_block(p, x, *, cfg, kind: str, use_moe: bool, rope, mode: str,
         x = x + hx
     h2 = rms_norm(p["ln2"], x, plus_one=cfg.norm_plus_one)
     if use_moe:
+        # dropless at decode AND verify: with no capacity competition each
+        # token's expert mix is batch-independent, which keeps speculative
+        # verify rows bit-identical to the decode steps they stand in for.
+        # Prefill/chunk use capacity routing: a chunked prefill therefore
+        # routes per chunk, and capacity competition (hence token dropping)
+        # depends on the chunk split — that chunk-split-dependence is the
+        # measured "moe" agreement budget (see repro.serving.equivalence).
         h2, aux = moe_lib.moe_ffn(p["moe"], h2, n_experts=cfg.moe.n_experts,
                                   top_k=cfg.moe.top_k, kind=cfg.ffn_kind,
                                   capacity_factor=cfg.moe.capacity_factor,
-                                  dropless=(mode == "decode"))
+                                  dropless=(mode in ("decode", "verify")))
     else:
         h2 = ffn_lib.ffn(p["ffn"], h2, cfg.ffn_kind)
     x = x + h2

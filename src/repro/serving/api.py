@@ -12,10 +12,7 @@ Types
   auto-assigned (process-unique) when left unset, and ``eos_id`` can
   override the engine-global ``ServeConfig.eos_id`` per request.
 * :class:`Completion` — one finished request, with per-phase timings, the
-  pinned weight version, and the speculative-decoding counters
-  (``draft_tokens_proposed``/``draft_tokens_accepted`` are 0 when
-  speculation is off; ``steps`` counts the engine sampling steps the
-  request lived through — < ``len(tokens)`` when drafts were accepted).
+  pinned weight version, and the speculative-decoding counters.
 * :class:`StagedInfo` — the staged weight version a reload-aware
   scheduler compares against its swap deadline.
 * :class:`SchedulerStats` — ``scheduler.stats()`` as a typed record
@@ -24,6 +21,25 @@ Types
 ``StagedInfo`` and ``SchedulerStats`` support ``info["key"]`` /
 ``info.get("key")`` alongside attribute access so existing dict-style
 consumers keep working across the API move.
+
+Example (doctest-checked in CI via ``python -m doctest``):
+
+>>> from repro.serving.api import Request, Completion, SchedulerStats
+>>> r = Request(prompt=[1, 2, 3], max_new_tokens=4, request_id=7)
+>>> (r.request_id, r.eos_id)           # eos_id None: engine default
+(7, None)
+>>> auto = Request(prompt=[5])
+>>> auto.request_id >= 1 << 20         # auto ids never clash with small
+True
+>>> c = Completion(request_id=7, tokens=[9, 9, 0], prefill_ms=1.5,
+...                decode_ms=6.0)
+>>> (c.weights_version, c.draft_tokens_accepted)
+(1, 0)
+>>> st = SchedulerStats(kind="continuous", steps=12, max_slots=4)
+>>> st["steps"] == st.steps == 12      # dict-style shim still works
+True
+>>> st.get("missing", 0)
+0
 """
 from __future__ import annotations
 
@@ -59,11 +75,22 @@ class _ItemAccess:
 class Request:
     """One generation request.
 
-    ``request_id`` left at the default (None) is auto-assigned a
-    process-unique id, so callers that don't need to correlate
-    completions can omit it. ``eos_id`` overrides the engine-global
-    ``ServeConfig.eos_id`` for this request only (None: use the
-    engine's; -1: never stop early regardless of the engine's).
+    Fields
+    ------
+    prompt
+        Token ids to prefill (ints in ``[0, vocab)``); must be non-empty.
+    max_new_tokens
+        Exact number of tokens to generate unless ``eos_id`` stops the
+        request early; the scheduler reserves cache space for all of them
+        at admission.
+    request_id
+        Correlates the :class:`Completion`. Left at the default (None) it
+        is auto-assigned a process-unique id (≥ ``1 << 20``, so explicit
+        small ids never clash), for callers that don't need to correlate.
+    eos_id
+        Per-request end-of-sequence override. None: use the
+        engine-global ``ServeConfig.eos_id``; -1: never stop early
+        regardless of the engine's.
     """
     prompt: Sequence[int]
     max_new_tokens: int = 16
@@ -77,23 +104,69 @@ class Request:
 
 @dataclasses.dataclass
 class Completion:
+    """One finished request.
+
+    Fields
+    ------
+    request_id
+        Echoes :attr:`Request.request_id`.
+    tokens
+        Generated token ids, in order — ``len(tokens) <
+        max_new_tokens`` only when EOS stopped the request early.
+    prefill_ms
+        Wall-clock milliseconds spent prefilling this request's prompt
+        (all chunks, for a chunked admission).
+    decode_ms
+        Wall-clock milliseconds from admission to retirement spent in
+        decode/verify steps (shared steps are attributed to every
+        resident request, not divided among them).
+    swap_ms
+        Milliseconds of weight-swap stall observed while this request
+        was in flight (0.0 when no reload landed).
+    weights_version
+        ``WeightStore`` version pinned at admission — every token of
+        this completion was produced by this version unless
+        ``forced_swaps`` is non-zero.
+    forced_swaps
+        Number of deadline force-swaps that landed while in flight
+        (> 0 means later tokens came from a newer weight version).
+    steps
+        Engine sampling steps the request lived through; with
+        speculative decoding this is < ``len(tokens)`` when drafts were
+        accepted (each accepted draft token skips a step).
+    draft_tokens_proposed
+        Speculative decoding only: draft tokens the low-bit tree
+        proposed for this request's slot (0 when speculation is off).
+    draft_tokens_accepted
+        Speculative decoding only: proposed tokens the verifier kept
+        (``accepted / proposed`` is this request's acceptance rate).
+    """
     request_id: int
     tokens: List[int]
     prefill_ms: float
     decode_ms: float
-    swap_ms: float = 0.0          # weight-swap time observed by this request
-    weights_version: int = 1      # WeightStore version pinned at admission
-    forced_swaps: int = 0         # deadline force-swaps that landed in flight
-    steps: int = 0                # engine sampling steps this request spanned
-    draft_tokens_proposed: int = 0   # speculative: drafts the w4 tree offered
-    draft_tokens_accepted: int = 0   # speculative: drafts the verifier kept
+    swap_ms: float = 0.0
+    weights_version: int = 1
+    forced_swaps: int = 0
+    steps: int = 0
+    draft_tokens_proposed: int = 0
+    draft_tokens_accepted: int = 0
 
 
 @dataclasses.dataclass
 class StagedInfo(_ItemAccess):
-    """A fully-built weight version waiting to be swapped in; ``age_ms``
-    is how long it has been waiting (schedulers compare it against their
-    swap deadline)."""
+    """A fully-built weight version waiting to be swapped in.
+
+    Fields
+    ------
+    version
+        The ``WeightStore`` version number that will become live at the
+        next swap point.
+    age_ms
+        Milliseconds since the version finished staging — reload-aware
+        schedulers compare this against ``swap_deadline_ms`` to decide
+        between draining and force-swapping.
+    """
     version: int
     age_ms: float
 
@@ -102,12 +175,60 @@ class StagedInfo(_ItemAccess):
 class SchedulerStats(_ItemAccess):
     """Typed ``scheduler.stats()`` record (both schedulers).
 
-    Round fills only ``kind``/``steps``/``rounds``; the continuous
-    scheduler fills the pool/admission/drain counters, the step-time
-    tails, and — when speculative decoding is on — the acceptance
-    telemetry: ``acceptance_rate`` is accepted/proposed draft tokens and
-    ``accepted_len`` holds p50/p95 of per-slot tokens committed per
-    verify cycle (1.0 == verifier-only pace).
+    The round scheduler fills only ``kind``/``steps``/``rounds``; the
+    continuous scheduler fills everything else. Counters are cumulative
+    over the scheduler's lifetime unless noted.
+
+    Fields
+    ------
+    kind
+        ``"round"`` or ``"continuous"``.
+    steps
+        Engine steps executed (decode or verify dispatches; a step
+        serves every resident slot at once).
+    rounds
+        Round scheduler only: FCFS rounds completed.
+    max_slots
+        Decode-slot pool size (continuous).
+    admitted / retired
+        Requests admitted into / retired from the slot pool.
+    waves
+        Clock-horizon wave resets (the contiguous pool emptying and
+        restarting its shared clock at 0).
+    drains
+        Reload drains entered (admission paused until in-flight slots
+        retire or the swap deadline forces).
+    forced_swaps
+        Deadline force-swaps performed.
+    mean_occupancy / max_occupancy
+        Resident slots per step — time-averaged mean and peak
+        (``mean_occupancy / max_slots`` is pool utilization).
+    prefill_chunk
+        Configured chunk width in prompt positions (0: monolithic).
+    chunk_steps
+        Engine steps that carried a chunk-prefill forward.
+    pendings_started / pendings_abandoned
+        Chunked admissions begun / abandoned by a force-swap (abandoned
+        ones re-queue and restart on the new weights).
+    step_ms
+        Decode step-time tail percentiles in milliseconds:
+        ``{"p50": ..., "p95": ..., "p99": ...}``.
+    kv
+        KV-backend stats passthrough (pool bytes, block counts, prefix
+        hit rate — keys depend on the backend).
+    speculative
+        True when self-speculative decoding is on; the remaining fields
+        are its telemetry (zero otherwise).
+    spec_cycles
+        Draft-verify cycles executed.
+    draft_tokens_proposed / draft_tokens_accepted
+        Draft tokens offered by the low-bit tree / kept by the
+        verifier, summed over all slots.
+    acceptance_rate
+        ``draft_tokens_accepted / draft_tokens_proposed``.
+    accepted_len
+        Per-verify-cycle committed tokens per slot, percentiles
+        ``{"p50": ..., "p95": ...}`` (1.0 == verifier-only pace).
     """
     kind: str
     steps: int = 0

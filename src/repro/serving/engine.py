@@ -16,8 +16,12 @@ Scheduling lives in :mod:`repro.serving.scheduler`:
   staged weight reload drains admission and swaps at a step boundary
   (force-swap after ``swap_deadline_ms``). With ``prefill_chunk > 0`` an
   admission prefill is consumed chunk-by-chunk across engine steps while
-  resident slots keep decoding, bounding per-step tail latency (greedy
-  tokens stay bit-identical to the monolithic path at equal padding).
+  resident slots keep decoding, bounding per-step tail latency. On
+  plain-attention dense stacks greedy tokens stay bit-identical to the
+  monolithic path at equal padding; MLA / sliding-window / MoE /
+  mamba / rwkv stacks chunk-continue their own mixer state and serve
+  under measured per-architecture agreement budgets
+  (:mod:`repro.serving.equivalence`, ``docs/equivalence.md``).
 
 KV-cache layout is a separate axis (``kv_backend``, see
 :mod:`repro.serving.kvcache`): ``"contiguous"`` keeps the one-cache-row-
@@ -49,7 +53,7 @@ from repro.serving.weights import (WeightStore, make_draft_quantize_fn,
                                    make_weight_pipeline)
 
 __all__ = ["ServeConfig", "Request", "Completion", "ServeEngine",
-           "CONFIG_GATES", "ConfigGate"]
+           "CONFIG_GATES", "ConfigGate", "ARCH_GATES", "ArchGate"]
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +149,59 @@ CONFIG_GATES: Tuple[ConfigGate, ...] = (
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class ArchGate:
+    """One row of the (ServeConfig × architecture) validity matrix — the
+    model-dependent sibling of :data:`CONFIG_GATES`. ``invalid(cfg,
+    arch_cfg)`` true rejects the pairing with ``error(message)``. Checked
+    once in :class:`ServeEngine.__init__` (the first point where both the
+    serve config and the model are known), and enumerated — together with
+    ``CONFIG_GATES`` and ``repro.serving.equivalence.AGREEMENT_BUDGETS`` —
+    by ``scripts/gen_support_matrix.py`` to render
+    ``docs/support-matrix.md``.
+
+    Architecture gates are deliberately few: chunked prefill is NOT gated
+    on architecture anymore — every decoder-only mixer has a
+    chunk-continuation path and serves under its measured agreement budget
+    (see :mod:`repro.serving.equivalence`). What remains gated is what has
+    no implementation at all, not what is merely tolerance-equivalent."""
+    name: str
+    invalid: Callable[["ServeConfig", Any], bool]
+    error: type
+    message: str
+
+    def check(self, cfg: "ServeConfig", arch_cfg: Any) -> None:
+        if self.invalid(cfg, arch_cfg):
+            raise self.error(self.message)
+
+
+def _arch_features(arch_cfg) -> Tuple[str, ...]:
+    from repro.models.model import arch_features
+    return arch_features(arch_cfg)
+
+
+ARCH_GATES: Tuple[ArchGate, ...] = (
+    ArchGate(
+        "encdec_x_continuous",
+        lambda c, a: c.scheduler == "continuous" and a.is_encdec,
+        NotImplementedError,
+        "continuous scheduler does not support encoder-decoder models yet "
+        "(per-slot encoder outputs have admission-dependent lengths); use "
+        "scheduler='round'"),
+    ArchGate(
+        "paged_x_non_positional_kv",
+        lambda c, a: c.kv_backend == "paged" and any(
+            f in ("mla", "sliding_window", "mamba", "rwkv")
+            for f in _arch_features(a)),
+        NotImplementedError,
+        "the paged KV cache requires per-position cache rows: MLA "
+        "compressed-latent caches, sliding-window rings, and mamba/rwkv "
+        "recurrent state cannot be block-paged; use "
+        "kv_backend='contiguous' (MoE stacks with plain attention page "
+        "fine — only the sequence-mixer cache layout matters)"),
+)
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_batch: int = 8
@@ -220,6 +277,10 @@ class ServeEngine:
         # versioned serving trees.
         self.model, quantize_fn, prepare_fn = \
             make_weight_pipeline(model, self.cfg)
+        # model-dependent feasibility (CONFIG_GATES ran in ServeConfig's
+        # __post_init__; these rows need the architecture too)
+        for gate in ARCH_GATES:
+            gate.check(self.cfg, self.model.cfg)
         if store is None:
             if params is None:
                 raise ValueError("ServeEngine needs params or a store")

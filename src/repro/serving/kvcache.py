@@ -212,7 +212,15 @@ class KVCache:
                                      quantize_kv=self.cfg.quantize_kv)
 
     def side_cache(self, k: int) -> dict:
-        """A reusable ``k``-row admission cache with the clock rewound."""
+        """A reusable ``k``-row admission cache with the clock rewound.
+
+        Stacks with recurrent state (mamba/rwkv) get a fresh allocation
+        every time: their state leaves are read at the first chunk of a
+        chunked admission — a retired request's state is not masked out
+        the way stale KV rows are, so reuse would leak it into the new
+        request's recurrence."""
+        if self.model.has_recurrent_state():
+            return self.fresh(k)
         cache = self._side_caches.get(k)
         if cache is None:
             cache = self.fresh(k)

@@ -333,28 +333,14 @@ class ContinuousScheduler(_SchedulerBase):
 
     def __init__(self, engine):
         super().__init__(engine)
-        if self.model.cfg.is_encdec:
-            raise NotImplementedError(
-                "continuous scheduler does not support encoder-decoder "
-                "models yet (per-slot encoder outputs have admission-"
-                "dependent lengths); use scheduler='round'")
-        self.chunk = int(self.cfg.prefill_chunk or 0)
         # config-only feasibility (chunk >= 0, paged backend shape rules)
-        # is validated in ServeConfig.__post_init__; only model-dependent
-        # gates live here
-        if self.chunk and not self.model.supports_chunked_prefill():
-            raise NotImplementedError(
-                "chunked prefill requires a plain-attention dense stack "
-                "(no MLA / sliding window / MoE / recurrent mixers): "
-                "those paths fold state across the whole prefix in "
-                "chunk-split-dependent order; set prefill_chunk=0")
-        if self.kv.backend == "paged" \
-                and not self.model.supports_chunked_prefill():
-            raise NotImplementedError(
-                "the paged KV cache requires a plain-attention dense stack "
-                "(no MLA / sliding window / MoE / recurrent mixers): block "
-                "gather-attention and shared-prefix continuation prefills "
-                "assume per-position cache rows; use kv_backend='contiguous'")
+        # is validated by engine.CONFIG_GATES; model-dependent feasibility
+        # (encoder-decoder x continuous, paged x non-positional caches) by
+        # engine.ARCH_GATES — both run in ServeEngine.__init__ before this.
+        # Chunked prefill itself is no longer gated on architecture: every
+        # decoder-only mixer has a chunk-continuation path, serving under
+        # its measured agreement budget (repro.serving.equivalence).
+        self.chunk = int(self.cfg.prefill_chunk or 0)
         self.max_slots = self.kv.max_slots
         self.slots: List[Optional[_Slot]] = [None] * self.max_slots
         # self-speculative decoding: the draft-side state + device plumbing

@@ -497,21 +497,37 @@ def test_starvation_guard_bounds_head_skips(scheduler_chunk):
     assert eng.scheduler._head_skips == 0
 
 
-def test_chunked_rejected_for_unsupported_stacks():
-    """Chunk continuations are only exact for plain-attention dense stacks;
-    everything else must be rejected up front. Quantized KV caches are no
-    longer in that list: chunks attending to dequantized prefix keys is
-    exactly what the int8 serving path does, held to the agreement budget
-    in repro.serving.equivalence instead of bit-identity."""
+def test_arch_gates_for_unsupported_stacks():
+    """The remaining architecture gates (engine.ARCH_GATES): chunked
+    prefill no longer rejects any decoder-only stack — window/MoE stacks
+    serve under their composed agreement budget — but the paged backend
+    still requires per-position cache rows, so non-positional mixers
+    (mamba here) are rejected up front with a pointer to contiguous."""
     cfg = get_config("mixtral-8x7b", reduced=True)   # window + MoE
     cfg = dataclasses.replace(cfg, dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    with pytest.raises(NotImplementedError, match="chunked prefill"):
-        ServeEngine(model, params,
+    # PR-10 gate lift: mixtral chunked prefill constructs and serves
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_len=32,
+                                  scheduler="continuous", prefill_chunk=4))
+    outs = eng.generate([Request(prompt=[1, 2, 3, 4, 5, 6],
+                                 max_new_tokens=3, request_id=0)])
+    assert len(outs[0].tokens) == 3
+    assert eng.trace_counts["prefill_chunk"] > 0
+    eng.close()
+    # paged × recurrent state stays gated (per-position rows required)
+    jcfg = dataclasses.replace(
+        get_config("jamba-1.5-large-398b", reduced=True), dtype="float32",
+        n_layers=2, block_pattern=("m", "a"), moe=None)
+    jmodel = build_model(jcfg)
+    jparams = jmodel.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="paged KV cache"):
+        ServeEngine(jmodel, jparams,
                     ServeConfig(max_batch=2, max_len=32,
-                                scheduler="continuous", prefill_chunk=4))
-    # quantize_kv × prefill_chunk composes now (PR-8 gate lift): the
+                                scheduler="continuous",
+                                kv_backend="paged", block_size=8))
+    # quantize_kv × prefill_chunk composes (PR-8 gate lift): the
     # engine constructs and serves rather than raising
     tiny_model, tiny_params = _tiny()
     eng = ServeEngine(tiny_model, tiny_params,
